@@ -1,0 +1,127 @@
+"""§III-B.2 accuracy reproduction: exact tuGEMM vs stochastic uGEMM inference.
+
+The paper: the same MLP scores 96.08% with tuGEMM (exact int8) vs 94.7% with
+uGEMM (stochastic rate-coded) — exactness matters at low precision. MNIST is
+not available offline, so we train the same-topology MLP (784-128-10, the
+uGEMM paper's MLP) on a synthetic-but-hard 10-class problem and compare
+inference accuracy with (a) float, (b) exact int8 (tuGEMM contract),
+(c) stochastic rate-coded at several stream lengths (uGEMM sim). The claim
+reproduced is the *ordering and gap*: exact ≥ stochastic, and the stochastic
+penalty grows as streams shorten / precision drops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ugemm_baseline import ugemm_stochastic
+from repro.quant.quantize import compute_scale, quantize
+
+
+_PROTO_KEY = jax.random.PRNGKey(1234)  # class prototypes shared train/test
+
+
+def _make_data(key, n: int, d: int = 784, classes: int = 10, noise: float = 6.0):
+    """Fixed class prototypes + heavy per-sample noise (hard but learnable)."""
+    kx, kn = jax.random.split(key)
+    protos = jax.random.normal(_PROTO_KEY, (classes, d))
+    y = jax.random.randint(kx, (n,), 0, classes)
+    x = protos[y] + noise * jax.random.normal(kn, (n, d))
+    return x / jnp.sqrt(d), y
+
+
+def _train_mlp(key, x, y, hidden: int = 128, steps: int = 150):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w1": jax.random.normal(k1, (x.shape[1], hidden)) * 0.05,
+        "b1": jnp.zeros(hidden),
+        "w2": jax.random.normal(k2, (hidden, 10)) * 0.05,
+        "b2": jnp.zeros(10),
+    }
+
+    @jax.jit
+    def step(p, lr):
+        def loss(p):
+            h = jax.nn.relu(x @ p["w1"] + p["b1"])
+            logits = h @ p["w2"] + p["b2"]
+            return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y])
+
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), l
+
+    for i in range(steps):
+        p, l = step(p, 0.5)
+    return p
+
+
+def _q8(x, axis=None):
+    s = compute_scale(x, 8, axis=axis)
+    if axis == 1:
+        return quantize(x, s.reshape(1, -1), 8), s
+    return quantize(x, s, 8), s
+
+
+def _acc(logits, y):
+    return float((jnp.argmax(logits, -1) == y).mean()) * 100
+
+
+def run(fast: bool = False) -> dict:
+    key = jax.random.PRNGKey(0)
+    ntest = 200 if fast else 500
+    xtr, ytr = _make_data(key, 1000 if fast else 2000)
+    xte, yte = _make_data(jax.random.fold_in(key, 1), ntest)
+    p = _train_mlp(jax.random.fold_in(key, 2), xtr, ytr)
+
+    # float reference
+    def mlp_float(x):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    acc_f = _acc(mlp_float(xte), yte)
+
+    # exact int8 (tuGEMM contract): quantize act per-tensor, weights per-col
+    def layer_exact(x, w, b):
+        xq, sx = _q8(x)
+        wq, sw = _q8(w, axis=1)
+        y = (xq.astype(jnp.int32) @ wq.astype(jnp.int32)).astype(jnp.float32)
+        return y * (sx * sw.reshape(1, -1)) + b
+
+    h = jax.nn.relu(layer_exact(xte, p["w1"], p["b1"]))
+    acc_t = _acc(layer_exact(h, p["w2"], p["b2"]), yte)
+
+    # stochastic rate-coded (uGEMM sim) at decreasing stream length; accuracy
+    # is itself a random variable of the bitstream draw, so average over
+    # several stream seeds (exact compute has no such variance — that IS the
+    # paper's point)
+    accs_s = {}
+    n_seeds = 2 if fast else 5
+    for L in ([256, 64] if fast else [256, 128, 64, 32]):
+        def layer_stoch(x, w, b, k, L=L):
+            xq, sx = _q8(x)
+            wq, sw = _q8(w, axis=1)
+            y = ugemm_stochastic(xq, wq, bitwidth=8, stream_length=L, key=k)
+            return y.astype(jnp.float32) * (sx * sw.reshape(1, -1)) + b
+
+        vals = []
+        for s in range(n_seeds):
+            k1, k2 = jax.random.split(jax.random.fold_in(key, 1000 * L + s))
+            hs = jax.nn.relu(layer_stoch(xte, p["w1"], p["b1"], k1))
+            vals.append(_acc(layer_stoch(hs, p["w2"], p["b2"], k2), yte))
+        accs_s[L] = float(np.mean(vals))
+
+    print(f"\nMLP accuracy (synthetic 10-class, n={ntest}):")
+    print(f"  float32                 : {acc_f:.2f}%")
+    print(f"  tuGEMM exact int8       : {acc_t:.2f}%   (paper: 96.08%)")
+    for L, a in accs_s.items():
+        print(f"  uGEMM stochastic L={L:<4} : {a:.2f}%   (paper @ unary period: 94.7%)")
+    best_s = max(accs_s.values())
+    print(f"  => exact - best stochastic gap: {acc_t - best_s:+.2f} pts "
+          f"(paper: +1.38); gap grows as L shrinks: "
+          f"{', '.join(f'{L}:{acc_t-a:+.1f}' for L, a in sorted(accs_s.items()))}")
+    return {"float": acc_f, "exact_int8": acc_t, "stochastic": accs_s}
+
+
+if __name__ == "__main__":
+    run()

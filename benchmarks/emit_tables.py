@@ -1,0 +1,40 @@
+"""Emit EXPERIMENTS.md markdown tables from dry-run JSON artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def rows(out_dir):
+    out = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(out_dir, mesh_filter=None):
+    lines = [
+        "| arch × shape | mesh | compute ms | memory ms | collective ms | dominant | useful | RL% | peak GB/chip | fits |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|---|",
+    ]
+    for d in sorted(rows(out_dir), key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        fits = "✓" if d["peak_bytes_per_chip"] <= 16e9 else "✗"
+        lines.append(
+            f"| {d['arch']} × {d['shape']} | {d['mesh']} | {d['compute_s']*1e3:.1f} | "
+            f"{d['memory_s']*1e3:.1f} | {d['collective_s']*1e3:.1f} | {d['dominant']} | "
+            f"{d['useful_ratio']:.2f} | {d['mfu']*100:.2f} | "
+            f"{d['peak_bytes_per_chip']/1e9:.2f} | {fits} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else None
+    print(table(d, mesh))

@@ -1,0 +1,50 @@
+"""Fig 4 reproduction: PPA comparison vs uGEMM (16×16, 2/4/8-bit).
+
+Checks the paper's headline ratios (8-bit 16×16 @ 400 MHz):
+  serial   vs uGEMM: 14.8× area, 11.1× power
+  parallel vs uGEMM:  3.7× area,  3.8× power
+  serial   vs parallel: 5.2× area (paper's abstract: ~4x..5.2x), 3.7×/~2.9× power
+and the 32×32-vs-16×16-uGEMM observation (§III-A): 32×32 parallel tuGEMM ≈
+16×16 uGEMM; 32×32 serial >3× more efficient than 16×16 uGEMM.
+"""
+
+from __future__ import annotations
+
+from repro.core.ppa import TABLE1, UGEMM_BASELINE
+
+
+def run(fast: bool = False) -> dict:
+    u_a, u_p = UGEMM_BASELINE["area_mm2"], UGEMM_BASELINE["power_w"]
+    out = {}
+    print(f"\n{'design':<26} {'area mm2':>9} {'power W':>8} {'area vs uGEMM':>14} {'power vs uGEMM':>15}")
+    print(f"{'uGEMM (8b 16x16)':<26} {u_a:>9.3f} {u_p:>8.3f} {'1.0x':>14} {'1.0x':>15}")
+    for variant in ("serial", "parallel"):
+        for w in (2, 4, 8):
+            a, p = TABLE1[(variant, 16, w)]
+            print(f"{f'tuGEMM {variant} {w}b 16x16':<26} {a:>9.3f} {p:>8.3f} "
+                  f"{u_a/a:>13.1f}x {u_p/p:>14.1f}x")
+    s_a, s_p = TABLE1[("serial", 16, 8)]
+    p_a, p_p = TABLE1[("parallel", 16, 8)]
+    out["serial_area_ratio"] = u_a / s_a
+    out["serial_power_ratio"] = u_p / s_p
+    out["parallel_area_ratio"] = u_a / p_a
+    out["parallel_power_ratio"] = u_p / p_p
+    out["serial_vs_parallel_area"] = p_a / s_a
+    out["serial_vs_parallel_power"] = p_p / s_p
+    print(f"\npaper claims (8-bit): serial 14.8x/11.1x -> got "
+          f"{out['serial_area_ratio']:.1f}x/{out['serial_power_ratio']:.1f}x")
+    print(f"                      parallel 3.7x/3.8x -> got "
+          f"{out['parallel_area_ratio']:.1f}x/{out['parallel_power_ratio']:.1f}x")
+    print(f"                      serial vs parallel 5.2x/3.7x area-> got "
+          f"{out['serial_vs_parallel_area']:.1f}x power-> {out['serial_vs_parallel_power']:.1f}x")
+    a32s, p32s = TABLE1[("serial", 32, 8)]
+    a32p, p32p = TABLE1[("parallel", 32, 8)]
+    print(f"32x32 parallel vs 16x16 uGEMM: area {a32p/u_a:.2f}x power {p32p/u_p:.2f}x (paper: ~similar)")
+    print(f"32x32 serial   vs 16x16 uGEMM: area {u_a/a32s:.1f}x power {u_p/p32s:.1f}x better (paper: >3x)")
+    out["p32_vs_ugemm_area"] = a32p / u_a
+    out["s32_vs_ugemm_area"] = u_a / a32s
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Kernel micro-benchmark: exactness sweep + CPU wall time per dispatch path.
+
+For each kernel (int8 GEMM, packed int4/int2 GEMM, thermometer-decomposed
+temporal GEMM, quantize) sweeps shapes and checks bit-exactness of the
+Pallas body (interpret mode) and the XLA path against the jnp oracle, then
+times the XLA path (what CPU users run; TPU would run the compiled Pallas
+kernels, which cannot be timed here).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import matmul_int_ref
+
+
+def _rand_int8(key, shape, bits=8):
+    m = 1 << (bits - 1)
+    return jax.random.randint(key, shape, -m, m, dtype=jnp.int32).astype(jnp.int8)
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(fast: bool = False) -> dict:
+    key = jax.random.PRNGKey(0)
+    shapes = [(64, 64, 64), (128, 256, 128)] if fast else [
+        (64, 64, 64), (128, 256, 128), (256, 512, 256), (512, 512, 512),
+    ]
+    out = {"exact": True, "timings": {}}
+    print(f"\n{'kernel':<18} {'shape':<18} {'xla ms':>8} {'exact(xla)':>11} {'exact(interp)':>14}")
+    for (M, K, N) in shapes:
+        ka, kb = jax.random.split(jax.random.fold_in(key, M * N))
+        a = _rand_int8(ka, (M, K))
+        b = _rand_int8(kb, (K, N))
+        ref = matmul_int_ref(a, b)
+
+        y_xla = ops.matmul_int8(a, b, impl="xla")
+        ok_x = bool((y_xla == ref).all())
+        ok_i = True
+        if M <= 128:  # interpret mode is python-slow; keep it to small shapes
+            y_int = ops.matmul_int8(a, b, impl="pallas_interpret")
+            ok_i = bool((y_int == ref).all())
+        dt = _time(lambda a, b: ops.matmul_int8(a, b, impl="xla"), a, b)
+        out["exact"] &= ok_x and ok_i
+        out["timings"][f"int8_{M}x{K}x{N}"] = dt * 1e3
+        gmacs = M * K * N / dt / 1e9
+        print(f"{'matmul_int8':<18} {f'{M}x{K}x{N}':<18} {dt*1e3:>8.2f} {str(ok_x):>11} {str(ok_i):>14}  ({gmacs:.1f} GMAC/s)")
+
+        for bits in (4, 2):
+            mb = 1 << (bits - 1)
+            a_s = jnp.clip(a, -mb, mb - 1)
+            b_s = jnp.clip(b, -mb, mb - 1)
+            packed = ops.pack_weights(b_s, bits)
+            y_p = ops.matmul_packed(a_s, packed, bits=bits, impl="xla")
+            ref_p = matmul_int_ref(a_s, b_s)
+            ok_p = bool((y_p == ref_p).all())
+            out["exact"] &= ok_p
+            print(f"{f'matmul_packed w{bits}':<18} {f'{M}x{K}x{N}':<18} {'-':>8} {str(ok_p):>11} {'-':>14}")
+
+    # temporal (thermometer) validation path, small shapes only
+    for bits in (2, 4):
+        m = 1 << (bits - 1)
+        a = jax.random.randint(key, (32, 16), -m, m, dtype=jnp.int32).astype(jnp.int8)
+        b = jax.random.randint(key, (16, 32), -m, m, dtype=jnp.int32).astype(jnp.int8)
+        y = ops.temporal_gemm(a, b, bitwidth=bits, impl="xla")
+        ok = bool((y == matmul_int_ref(a, b)).all())
+        out["exact"] &= ok
+        print(f"{f'temporal_gemm w{bits}':<18} {'32x16x32':<18} {'-':>8} {str(ok):>11} {'-':>14}")
+    print(f"\nall kernels bit-exact: {out['exact']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads ``experiments/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+emits the §Roofline markdown table: per (arch × shape × mesh) the three terms
+in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline
+fraction. Run the dry-run first; this benchmark only aggregates.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def rows(out_dir: str = "experiments/dryrun"):
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            yield json.load(fh)
+
+
+def run(fast: bool = False, out_dir: str = "experiments/dryrun") -> dict:
+    table = list(rows(out_dir))
+    if not table:
+        print("\n[roofline_all] no dry-run artifacts found; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --both-meshes` first")
+        return {"rows": 0}
+    print(f"\n{'cell':<52} {'mesh':>8} {'comp ms':>8} {'mem ms':>8} {'coll ms':>8} "
+          f"{'dominant':>10} {'useful':>7} {'RL%':>6} {'GB/chip':>8} {'fits':>5}")
+    n_fit = 0
+    for d in sorted(table, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        fits = d["peak_bytes_per_chip"] <= 16e9
+        n_fit += fits
+        print(
+            f"{d['arch'] + '×' + d['shape']:<52} {d['mesh']:>8} "
+            f"{d['compute_s']*1e3:>8.1f} {d['memory_s']*1e3:>8.1f} {d['collective_s']*1e3:>8.1f} "
+            f"{d['dominant']:>10} {d['useful_ratio']:>7.2f} {d['mfu']*100:>5.1f}% "
+            f"{d['peak_bytes_per_chip']/1e9:>8.2f} {'y' if fits else 'N':>5}"
+        )
+    print(f"\n{len(table)} cells, {n_fit} fit in 16 GB/chip")
+    return {"rows": len(table), "fit": n_fit}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Benchmark harness: one runner per paper table/figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --fast     # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --only fig5_maxval_profile
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+
+BENCHES = [
+    "table1_ppa",           # Table I: post-synthesis PPA, 12 datapoints
+    "fig4_comparison",      # Fig 4: tuGEMM vs uGEMM PPA ratios
+    "latency_eval",         # §III-B: worst/avg-case latency
+    "fig5_maxval_profile",  # Fig 5: max-value profiling -> avg-case speedup
+    "accuracy_mlp",         # §III-B.2: exact vs stochastic accuracy
+    "kernel_bench",         # kernels: exactness sweep + µs/call
+    "edge_planner",         # §IV: deployment planner (beyond paper)
+    "roofline_all",         # deliverable (g): aggregate dry-run rooflines
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    results, failures = {}, []
+    for name in BENCHES:
+        if args.only and name != args.only:
+            continue
+        print(f"\n{'='*78}\n== {name}\n{'='*78}")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            results[name] = mod.run(fast=args.fast)
+            print(f"-- {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"-- {name} FAILED: {e!r}")
+            traceback.print_exc()
+
+    print(f"\n{'='*78}\n{len(results)} benchmarks ok, {len(failures)} failed"
+          + (f": {failures}" if failures else ""))
+    if args.json_out:
+        def clean(o):
+            if isinstance(o, dict):
+                return {str(k): clean(v) for k, v in o.items()}
+            if isinstance(o, (list, tuple)):
+                return [clean(v) for v in o]
+            if hasattr(o, "item"):
+                return o.item()
+            return o
+
+        with open(args.json_out, "w") as f:
+            json.dump(clean(results), f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

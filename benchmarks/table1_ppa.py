@@ -1,0 +1,64 @@
+"""Table I reproduction: analytic PPA model vs every paper datapoint.
+
+The paper's Table I gives post-synthesis area/power for serial/parallel
+tuGEMM at {2,4,8}-bit × {16×16, 32×32} (45 nm, 400 MHz). Our calibrated
+model (core/ppa.py) must reproduce all 12 points; this benchmark prints the
+side-by-side table and the fit error, and checks the paper's scaling claims:
+~2.1×/2.0× (serial) and ~1.6×/1.7× (parallel) area/power per 2× bit-width,
+and ~4× area/power from 16×16 → 32×32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ppa import TABLE1, ppa_model
+
+
+def run(fast: bool = False) -> dict:
+    rows = []
+    errs = []
+    print(f"\n{'config':<22} {'area paper':>10} {'area model':>10} {'err%':>6} "
+          f"{'pow paper':>10} {'pow model':>10} {'err%':>6}")
+    for (variant, S, w), (a_ref, p_ref) in sorted(TABLE1.items()):
+        m = ppa_model(variant)
+        a = m.area_mm2(w, S, S, S)
+        p = m.power_w(w, S, S, S)
+        ea = 100 * (a - a_ref) / a_ref
+        ep = 100 * (p - p_ref) / p_ref
+        errs += [abs(ea), abs(ep)]
+        rows.append(dict(variant=variant, S=S, w=w, area_model=a, power_model=p,
+                         area_err_pct=ea, power_err_pct=ep))
+        print(f"{variant:>8} {S}x{S} w={w:<2} {a_ref:>10.3f} {a:>10.3f} {ea:>6.1f} "
+              f"{p_ref:>10.3f} {p:>10.3f} {ep:>6.1f}")
+
+    # paper scaling claims
+    def ratio(variant, metric):
+        vals = []
+        for S in (16, 32):
+            for hi, lo in ((8, 4), (4, 2)):
+                a = TABLE1[(variant, S, hi)][metric] / TABLE1[(variant, S, lo)][metric]
+                vals.append(a)
+        return float(np.mean(vals))
+
+    claims = {
+        "serial area per 2x bits (paper 2.1x)": ratio("serial", 0),
+        "serial power per 2x bits (paper 2.0x)": ratio("serial", 1),
+        "parallel area per 2x bits (paper 1.6x)": ratio("parallel", 0),
+        "parallel power per 2x bits (paper 1.7x)": ratio("parallel", 1),
+    }
+    print()
+    for k, v in claims.items():
+        print(f"  {k}: {v:.2f}x")
+    size_scale = np.mean(
+        [TABLE1[(v, 32, w)][i] / TABLE1[(v, 16, w)][i]
+         for v in ("serial", "parallel") for w in (2, 4, 8) for i in (0, 1)]
+    )
+    print(f"  16x16 -> 32x32 area/power (paper ~4x): {size_scale:.2f}x")
+    print(f"  PPA model fit: max err {max(errs):.1f}%, mean {np.mean(errs):.1f}%")
+    return {"rows": rows, "max_err_pct": max(errs), "mean_err_pct": float(np.mean(errs)),
+            "claims": claims, "size_scale": float(size_scale)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,13 @@
+"""Config system: ModelConfig/ShapeConfig/RunConfig + the arch registry."""
+
+from .base import SHAPES, ModelConfig, RunConfig, ShapeConfig, get_config, list_configs, register
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "get_config",
+    "list_configs",
+    "register",
+]

@@ -1,0 +1,70 @@
+"""Temporal-unary (thermometer) encoding — the paper's C1 contribution.
+
+A value ``n`` is represented as a contiguous pulse of ``|n|`` ones followed by
+zeros on a single bitline (two transitions total, vs. O(L) for rate coding).
+Sign travels on a separate ``neg`` wire, exactly as in the paper's
+``neg_col/row`` signals.
+
+For w-bit two's-complement inputs the paper treats the maximum magnitude as
+``2**(w-1)`` (e.g. 128 for 8 bits — Fig. 5's x-axis), so thermometer codes
+here have ``2**(w-1)`` slots.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "max_magnitude",
+    "int_range",
+    "thermometer_encode",
+    "thermometer_decode",
+    "temporal_bitstream",
+]
+
+
+def max_magnitude(bitwidth: int) -> int:
+    """Largest magnitude a w-bit two's-complement value can take (paper §III-B)."""
+    if bitwidth < 2:
+        raise ValueError(f"bitwidth must be >= 2, got {bitwidth}")
+    return 2 ** (bitwidth - 1)
+
+
+def int_range(bitwidth: int) -> tuple[int, int]:
+    """Inclusive representable range of w-bit two's complement."""
+    m = max_magnitude(bitwidth)
+    return -m, m - 1
+
+
+def thermometer_encode(x: jnp.ndarray, bitwidth: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode integer array ``x`` as (thermometer bits, neg flags).
+
+    Returns ``(bits, neg)`` where ``bits`` has a trailing axis of size
+    ``2**(bitwidth-1)`` with ``bits[..., u] = 1[u < |x|]`` (the state of the
+    unary bitline at cycle ``u``), and ``neg = x < 0`` (the ``neg_col/row``
+    wire). dtype of bits is int8 (a single wire).
+    """
+    m = max_magnitude(bitwidth)
+    mag = jnp.abs(x.astype(jnp.int32))
+    slots = jnp.arange(m, dtype=jnp.int32)
+    bits = (slots[None, :] < mag[..., None].reshape(-1, 1)).astype(jnp.int8)
+    bits = bits.reshape(*x.shape, m)
+    neg = x < 0
+    return bits, neg
+
+
+def thermometer_decode(bits: jnp.ndarray, neg: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`thermometer_encode` (sum of pulse cycles, signed)."""
+    mag = bits.astype(jnp.int32).sum(axis=-1)
+    return jnp.where(neg, -mag, mag)
+
+
+def temporal_bitstream(x: jnp.ndarray, bitwidth: int) -> jnp.ndarray:
+    """Signed temporal bitstream: +1 / -1 pulses, 0 after the pulse ends.
+
+    ``stream[..., u] = sign(x) * 1[u < |x|]`` — what the output counter cell
+    sees per cycle (increment, decrement, or hold).
+    """
+    bits, neg = thermometer_encode(x, bitwidth)
+    sign = jnp.where(neg, -1, 1).astype(jnp.int8)
+    return bits * sign[..., None]

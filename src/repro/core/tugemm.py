@@ -1,0 +1,92 @@
+"""Functional tuGEMM op: exact integer GEMM + hardware latency statistics.
+
+This is the *mathematical contract* of the tuGEMM hardware (DESIGN.md §2A):
+``Y = A @ B + C`` computed exactly in integers, together with the
+data-dependent cycle counts the serial/parallel micro-architectures would
+take on this input.
+
+Cycle model (validated cycle-for-cycle against ``core.cycle_sim``):
+
+* step ``i`` (outer product of A[:, i] and B[i, :]):
+  the P row counters drain in ``max_p |B[i,p]|`` cycles per inner loop; the
+  M column counters need ``max_m |A[m,i]|`` inner loops, so::
+
+      step_cycles[i] = maxA_i * max(maxB_i, 1)      (0 if maxA_i == 0)
+
+  (the ``max(., 1)`` covers the corner where a whole B row is zero: the row
+  counters are already at zero so the column counters drain one per cycle).
+* serial   total = sum_i step_cycles[i]   (steps run one after another)
+* parallel total = max_i step_cycles[i]   (N replicated vector counters)
+
+Worst case: every step costs ``(2**(w-1))**2`` ⇒ serial ``N * (2**(w-1))**2``
+— the paper's §III-B.1 formula.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .encoding import max_magnitude
+
+__all__ = ["TuGemmStats", "tugemm", "step_cycles", "validate_range"]
+
+
+class TuGemmStats(NamedTuple):
+    """Data-dependent hardware statistics for one (possibly batched) GEMM."""
+
+    step_cycles: jnp.ndarray      # (..., N) cycles per outer-product step
+    serial_cycles: jnp.ndarray    # (...,)   total cycles, serial variant
+    parallel_cycles: jnp.ndarray  # (...,)   total cycles, parallel variant
+    max_abs: jnp.ndarray          # (...,)   max |value| over A and B (Fig 5 statistic)
+
+
+def validate_range(x: jnp.ndarray, bitwidth: int) -> jnp.ndarray:
+    """True iff every element of ``x`` is representable in w-bit two's complement."""
+    m = max_magnitude(bitwidth)
+    xi = x.astype(jnp.int32)
+    return jnp.all((xi >= -m) & (xi <= m - 1))
+
+
+def step_cycles(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Per-step cycle counts. A: (..., M, N), B: (..., N, P) → (..., N)."""
+    a = jnp.abs(A.astype(jnp.int32))
+    b = jnp.abs(B.astype(jnp.int32))
+    max_a = a.max(axis=-2)                      # (..., N) max over M rows
+    max_b = b.max(axis=-1)                      # (..., N) max over P cols
+    return max_a * jnp.maximum(max_b, 1)
+
+
+def tugemm(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray | None = None,
+    *,
+    collect_stats: bool = True,
+) -> tuple[jnp.ndarray, TuGemmStats | None]:
+    """Exact integer GEMM ``Y = A @ B + C`` with tuGEMM cycle statistics.
+
+    A: (..., M, N) int, B: (..., N, P) int, C: (..., M, P) int or None.
+    Accumulation is int32 — the hardware's output counters/adders are wide
+    enough for ``N * (2**(w-1))**2 + |C|`` and never wrap for w ≤ 8, N ≤ 2^14.
+    """
+    a = A.astype(jnp.int32)
+    b = B.astype(jnp.int32)
+    y = jnp.matmul(a, b)
+    if C is not None:
+        y = y + C.astype(jnp.int32)
+
+    if not collect_stats:
+        return y, None
+
+    sc = step_cycles(A, B)
+    stats = TuGemmStats(
+        step_cycles=sc,
+        serial_cycles=sc.sum(axis=-1),
+        parallel_cycles=sc.max(axis=-1),
+        max_abs=jnp.maximum(
+            jnp.abs(a).max(axis=(-1, -2)), jnp.abs(b).max(axis=(-1, -2))
+        ),
+    )
+    return y, stats

@@ -1,0 +1,70 @@
+"""Stochastic rate-coded unary GEMM — the paper's uGEMM [21] baseline.
+
+The paper's accuracy claim (§III-B.2) is that *exact* temporal compute beats
+*stochastic* rate-coded compute at low precision (96.08 % vs 94.7 % on the
+same MLP). To reproduce that comparison we implement a rate-coded stochastic
+GEMM simulator: values are encoded as Bernoulli bitstreams (probability of a
+'1' ∝ magnitude), multiplication is a bitwise AND of independent streams,
+and accumulation is an accumulative parallel counter (APC). The estimator is
+unbiased with variance O(1/L) in the stream length L — the classic stochastic
+computing error floor that tuGEMM eliminates.
+
+This is a *functional* simulator of rate-coded arithmetic, not a gate-level
+re-implementation of the uGEMM paper's exact pipeline; it reproduces the
+error characteristics the tuGEMM paper compares against (documented
+assumption, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .encoding import max_magnitude
+
+__all__ = ["ugemm_stochastic", "stochastic_stream"]
+
+
+def stochastic_stream(
+    x: jnp.ndarray, bitwidth: int, length: int, key: jax.Array
+) -> jnp.ndarray:
+    """Rate-coded bitstream for |x|/2**(w-1): (..., L) int8 with
+    P(bit=1) = |x| / max_magnitude. Sign is carried separately."""
+    m = max_magnitude(bitwidth)
+    prob = jnp.abs(x.astype(jnp.float32)) / m
+    u = jax.random.uniform(key, (*x.shape, length), dtype=jnp.float32)
+    return (u < prob[..., None]).astype(jnp.int8)
+
+
+def ugemm_stochastic(
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray | None = None,
+    *,
+    bitwidth: int,
+    stream_length: int | None = None,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """Stochastic rate-coded GEMM (uGEMM-style). Returns an int32 *estimate*
+    of A @ B + C with stochastic error ~ O(1/sqrt(L)) per product.
+
+    A: (M, N), B: (N, P). Stream length defaults to 2**bitwidth (one full
+    unary period, uGEMM's configuration).
+    """
+    m = max_magnitude(bitwidth)
+    L = stream_length or (1 << bitwidth)
+    ka, kb = jax.random.split(key)
+    sa = stochastic_stream(A, bitwidth, L, ka)           # (M, N, L)
+    sb = stochastic_stream(B, bitwidth, L, kb)           # (N, P, L)
+    sign = jnp.sign(A.astype(jnp.int32))[:, :, None] * jnp.sign(
+        B.astype(jnp.int32)
+    )[None, :, :]                                        # (M, N, P)
+
+    # AND-multiply per stream bit, APC-accumulate over N and L:
+    # E[popcount] = L * |a||b| / m².  einsum over the stream axis = the APC.
+    pop = jnp.einsum("mnl,npl->mnp", sa.astype(jnp.int32), sb.astype(jnp.int32))
+    est = jnp.sum(sign * pop, axis=1).astype(jnp.float32) * (m * m / L)
+    y = jnp.round(est).astype(jnp.int32)
+    if C is not None:
+        y = y + C.astype(jnp.int32)
+    return y

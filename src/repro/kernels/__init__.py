@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for tuGEMM's compute hot-spots (+ refs and wrappers).
+
+- ``tugemm_int8``     exact int8 GEMM, int32 accumulation (the perf path)
+- ``tugemm_packed``   plane-packed int4/int2 GEMM (sub-byte HBM traffic)
+- ``temporal_unary``  thermometer-decomposed GEMM (paper's C1, validation path)
+- ``unary_stats``     fused absmax reductions -> hardware cycle statistics
+- ``quantize``        fused symmetric quantization
+- ``ops``             public padded/platform-dispatched API
+- ``ref``             pure-jnp oracles for all of the above
+"""
+
+from .ops import (
+    matmul_int8,
+    matmul_packed,
+    pack_weights,
+    quantize_sym,
+    temporal_gemm,
+    unary_step_stats,
+)
+
+__all__ = [
+    "matmul_int8",
+    "matmul_packed",
+    "pack_weights",
+    "quantize_sym",
+    "temporal_gemm",
+    "unary_step_stats",
+]

@@ -1,0 +1,232 @@
+"""Public jit'd wrappers for the tuGEMM kernels, with platform dispatch.
+
+- ``impl="auto"``: compiled Pallas on TPU, bit-exact XLA reference path on CPU
+  (interpret mode is Python-slow; the XLA path computes the *identical*
+  integers, so CPU users lose nothing but the Mosaic codegen).
+- ``impl="pallas_interpret"``: force interpret-mode Pallas — used by the test
+  suite to validate the kernel bodies on CPU.
+- ``impl="pallas"`` / ``impl="xla"``: force one side.
+
+All wrappers pad arbitrary shapes to block multiples and slice back; padding
+is with zeros, which is invisible to exact integer GEMM and to the absmax
+statistics. Small dims shrink the block to the padded size (interpret-mode /
+CPU convenience; on TPU the production shapes are already 128-aligned).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tugemm import TuGemmStats
+from . import ref
+from .packing import pack_planes, pad_to_multiple
+from .quantize import quantize_sym_pallas
+from .temporal_unary import temporal_unary_gemm_pallas
+from .tugemm_int8 import matmul_int8_pallas
+from .tugemm_packed import matmul_packed_pallas
+from .unary_stats import colabsmax_pallas, rowabsmax_pallas
+
+__all__ = [
+    "matmul_int8",
+    "matmul_packed",
+    "temporal_gemm",
+    "unary_step_stats",
+    "quantize_sym",
+    "pack_weights",
+]
+
+_PLANES = {8: 1, 4: 2, 2: 4}
+
+
+def _resolve(impl: str) -> tuple[str, bool]:
+    """Returns (path, interpret) with path in {pallas, xla}."""
+    if impl == "auto":
+        return ("pallas", False) if jax.default_backend() == "tpu" else ("xla", False)
+    if impl == "pallas":
+        return "pallas", False
+    if impl == "pallas_interpret":
+        return "pallas", True
+    if impl == "xla":
+        return "xla", False
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _block(dim: int, default: int, quantum: int = 8) -> tuple[int, int]:
+    """(block, padded_dim): shrink block for small dims, else pad to multiple."""
+    if dim >= default:
+        return default, dim + (-dim) % default
+    blk = dim + (-dim) % quantum
+    return blk, blk
+
+
+def _pad2(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, m0 - x.shape[0]), (0, m1 - x.shape[1])))
+
+
+def matmul_int8(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray | None = None,
+    *,
+    collect_stats: bool = False,
+    impl: str = "auto",
+):
+    """Exact int8 GEMM (tuGEMM contract). Returns y or (y, TuGemmStats)."""
+    path, interp = _resolve(impl)
+    M, K = a.shape
+    _, N = b.shape
+    if path == "xla":
+        y = ref.matmul_int_ref(a, b, c)
+    else:
+        bm, Mp = _block(M, 256)
+        bn, Np = _block(N, 512)
+        bk, Kp = _block(K, 256)
+        ap = _pad2(a.astype(jnp.int8), Mp, Kp)
+        bp = _pad2(b.astype(jnp.int8), Kp, Np)
+        cp = None if c is None else _pad2(c.astype(jnp.int32), Mp, Np)
+        y = matmul_int8_pallas(
+            ap, bp, cp, block_m=bm, block_n=bn, block_k=bk, interpret=interp
+        )[:M, :N]
+    if not collect_stats:
+        return y
+    return y, unary_step_stats(a, b, impl=impl)
+
+
+def unary_step_stats(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "auto") -> TuGemmStats:
+    """tuGEMM data-dependent cycle statistics for A (M,K) @ B (K,N)."""
+    path, interp = _resolve(impl)
+    if path == "xla":
+        ca, rb, sc = ref.unary_stats_ref(a, b)
+    else:
+        M, K = a.shape
+        _, N = b.shape
+        bm, Mp = _block(M, 256)
+        bk, Kp = _block(K, 512)
+        bk2, Kp2 = _block(K, 256)
+        bn, Np = _block(N, 512)
+        Kpad = max(Kp, Kp2)
+        ca = colabsmax_pallas(
+            _pad2(a.astype(jnp.int8), Mp, Kpad),
+            block_m=bm,
+            block_k=min(bk, Kpad),
+            interpret=interp,
+        )[0, :K]
+        rb = rowabsmax_pallas(
+            _pad2(b.astype(jnp.int8), Kpad, Np),
+            block_k=min(bk2, Kpad),
+            block_n=bn,
+            interpret=interp,
+        )[:K, 0]
+        sc = ca * jnp.maximum(rb, 1)
+    return TuGemmStats(
+        step_cycles=sc,
+        serial_cycles=sc.sum(axis=-1),
+        parallel_cycles=sc.max(axis=-1),
+        max_abs=jnp.maximum(ca.max(), rb.max()),
+    )
+
+
+def pack_weights(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Offline weight packing for the sub-byte path (pads K to plane multiple)."""
+    planes = _PLANES[bits]
+    if bits == 8:
+        return w.astype(jnp.int8)
+    w = pad_to_multiple(w.astype(jnp.int8), 0, planes)
+    return pack_planes(w, bits)
+
+
+def matmul_packed(
+    a: jnp.ndarray,
+    packed_b: jnp.ndarray,
+    *,
+    bits: int,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """A (M, K) int8 · plane-packed B (ceil(K/planes), N) → (M, N) int32.
+
+    A is zero-padded up to ``planes * packed_b.shape[0]`` logical K (matching
+    ``pack_weights``' padding).
+    """
+    path, interp = _resolve(impl)
+    planes = _PLANES[bits]
+    M, K = a.shape
+    Kp_, N = packed_b.shape
+    Klog = planes * Kp_
+    assert K <= Klog, (a.shape, packed_b.shape, bits)
+    a = jnp.pad(a.astype(jnp.int8), ((0, 0), (0, Klog - K)))
+    if path == "xla":
+        return ref.packed_matmul_ref(a, packed_b, bits)
+    bm, Mp = _block(M, 256)
+    bn, Np = _block(N, 512)
+    bkp, Kpp = _block(Kp_, 128)
+    ap = _pad2(a, Mp, planes * Kpp)
+    # re-pad plane-consistently: pad each plane's K range, i.e. repack
+    if Kpp != Kp_:
+        # zero rows appended per plane: easiest is pad packed rows directly
+        # (bits of appended packed rows are zero ⇒ all planes zero ⇒ exact)
+        ap = _pad2(a, Mp, planes * Kpp)
+        # move plane p rows: logical K layout [p*Kpp + r] vs packed rows r
+        # zero-padding packed rows keeps plane p's logical rows at
+        # [p*Kp_ .. p*Kp_+Kp_) — remap A columns accordingly.
+        cols = []
+        for p in range(planes):
+            seg = a[:, p * Kp_ : (p + 1) * Kp_]
+            cols.append(jnp.pad(seg, ((0, 0), (0, Kpp - Kp_))))
+        ap = _pad2(jnp.concatenate(cols, axis=1), Mp, planes * Kpp)
+    pb = _pad2(packed_b.astype(jnp.int8), Kpp, Np)
+    y = matmul_packed_pallas(
+        ap, pb, bits=bits, block_m=bm, block_n=bn, block_k=bkp, interpret=interp
+    )
+    return y[:M, :N]
+
+
+def temporal_gemm(
+    a: jnp.ndarray, b: jnp.ndarray, *, bitwidth: int, impl: str = "auto"
+) -> jnp.ndarray:
+    """Thermometer-decomposed exact GEMM (validation path, DESIGN.md §2B)."""
+    path, interp = _resolve(impl)
+    if path == "xla":
+        return ref.temporal_unary_gemm_ref(a, b, bitwidth)
+    M, K = a.shape
+    _, N = b.shape
+    bm, Mp = _block(M, 128)
+    bn, Np = _block(N, 256)
+    bk, Kp = _block(K, 128)
+    y = temporal_unary_gemm_pallas(
+        _pad2(a.astype(jnp.int8), Mp, Kp),
+        _pad2(b.astype(jnp.int8), Kp, Np),
+        bitwidth=bitwidth,
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        interpret=interp,
+    )
+    return y[:M, :N]
+
+
+def quantize_sym(
+    x: jnp.ndarray,
+    scale: jnp.ndarray | float,
+    *,
+    bitwidth: int,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Symmetric quantization of x (M, N) by per-tensor or per-column scale."""
+    path, interp = _resolve(impl)
+    M, N = x.shape
+    inv = 1.0 / jnp.asarray(scale, dtype=jnp.float32)
+    inv = jnp.broadcast_to(inv.reshape(1, -1), (1, N)) if inv.ndim <= 1 or inv.shape != (1, N) else inv
+    if path == "xla":
+        return ref.quantize_sym_ref(x, inv, bitwidth)
+    bm, Mp = _block(M, 256)
+    bn, Np = _block(N, 512)
+    q = quantize_sym_pallas(
+        _pad2(x, Mp, Np),
+        jnp.pad(inv, ((0, 0), (0, Np - N)), constant_values=1.0),
+        bitwidth=bitwidth,
+        block_m=bm,
+        block_n=bn,
+        interpret=interp,
+    )
+    return q[:M, :N]

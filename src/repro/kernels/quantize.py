@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused symmetric quantization (scale · round · clip · cast).
+
+Activation quantization runs on every forward pass of the tuGEMM low-precision
+path, so it gets a kernel: one VMEM-resident pass producing the int8 carrier
+(for int4/int2 the same carrier holds the narrower range; plane packing of
+*weights* happens offline in packing.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize_sym_pallas"]
+
+
+def _kernel(x_ref, s_ref, o_ref, *, lo: int, hi: int):
+    q = jnp.round(x_ref[...].astype(jnp.float32) * s_ref[...])
+    o_ref[...] = jnp.clip(q, lo, hi).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bitwidth", "block_m", "block_n", "interpret")
+)
+def quantize_sym_pallas(
+    x: jnp.ndarray,
+    inv_scale: jnp.ndarray,
+    *,
+    bitwidth: int,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x (M, N) float · inv_scale (1, N) float32 → int8 in w-bit range."""
+    M, N = x.shape
+    assert inv_scale.shape == (1, N), inv_scale.shape
+    assert M % block_m == 0 and N % block_n == 0
+    lo, hi = -(2 ** (bitwidth - 1)), 2 ** (bitwidth - 1) - 1
+    return pl.pallas_call(
+        functools.partial(_kernel, lo=lo, hi=hi),
+        grid=(M // block_m, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8),
+        interpret=interpret,
+    )(x, inv_scale.astype(jnp.float32))

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-exact specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts exact equality for
+integer paths, allclose for float paths).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .packing import unpack_plane
+
+__all__ = [
+    "matmul_int_ref",
+    "packed_matmul_ref",
+    "temporal_unary_gemm_ref",
+    "unary_stats_ref",
+    "quantize_sym_ref",
+]
+
+
+def matmul_int_ref(
+    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Exact integer GEMM with int32 accumulation (the tuGEMM contract)."""
+    y = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+    if c is not None:
+        y = y + c.astype(jnp.int32)
+    return y
+
+
+def packed_matmul_ref(
+    a: jnp.ndarray, packed_b: jnp.ndarray, bits: int, c: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Oracle for the plane-packed int4/int2 GEMM: unpack planes, then GEMM."""
+    planes = {4: 2, 2: 4}[bits]
+    kp = packed_b.shape[0]
+    b = jnp.concatenate(
+        [unpack_plane(packed_b, bits, p) for p in range(planes)], axis=0
+    )
+    assert a.shape[1] == kp * planes, (a.shape, packed_b.shape, bits)
+    return matmul_int_ref(a, b, c)
+
+
+def temporal_unary_gemm_ref(
+    a: jnp.ndarray, b: jnp.ndarray, bitwidth: int, c: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Oracle for the thermometer-decomposed GEMM: independent plain GEMM
+    (the decomposition must be *exact*, so the oracle does not share its
+    structure)."""
+    del bitwidth
+    return matmul_int_ref(a, b, c)
+
+
+def unary_stats_ref(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused tuGEMM statistics reduction.
+
+    Returns (colmax_a, rowmax_b, step_cycles): per outer-product step k,
+    ``colmax_a[k] = max_m |A[m,k]|``, ``rowmax_b[k] = max_p |B[k,p]|``,
+    ``step_cycles[k] = colmax_a[k] * max(rowmax_b[k], 1)``.
+    """
+    ca = jnp.abs(a.astype(jnp.int32)).max(axis=0)
+    rb = jnp.abs(b.astype(jnp.int32)).max(axis=1)
+    return ca, rb, ca * jnp.maximum(rb, 1)
+
+
+def quantize_sym_ref(
+    x: jnp.ndarray, inv_scale: jnp.ndarray, bitwidth: int
+) -> jnp.ndarray:
+    """Symmetric round-to-nearest-even quantization to w-bit two's complement.
+
+    ``inv_scale`` broadcasts against ``x`` (per-tensor (1,1) or per-channel
+    (1, N)). Output clipped to [-2**(w-1), 2**(w-1)-1], int8 carrier.
+    """
+    q = jnp.round(x.astype(jnp.float32) * inv_scale)
+    lo, hi = -(2 ** (bitwidth - 1)), 2 ** (bitwidth - 1) - 1
+    return jnp.clip(q, lo, hi).astype(jnp.int8)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: thermometer-decomposed (temporal-unary) GEMM.
+
+The paper's C1 insight in TPU-native form (DESIGN.md §2B): temporal coding
+decomposes an integer GEMM into a sequence of *binary masked accumulations*,
+
+    A @ B = sum_{u=0}^{2^(w-1)-1}  sign(A)·1[u < |A|]  @  B,
+
+one term per tick of the hardware's column counter (each term's A-side is a
+{-1,0,+1} matrix — a single unary bitline state). The kernel executes the
+``2**(w-1)`` unary steps as a fori_loop over MXU matmuls; the inner row
+counter's cycles are what the MXU's binary B-side multiply subsumes.
+
+Bit-exact with the plain GEMM oracle — that *is* the exactness claim of the
+paper, demonstrated on the MXU. This is the didactic/validation path, not
+the perf path (one int8 MXU pass subsumes all unary steps at once): use
+``tugemm_int8`` for speed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["temporal_unary_gemm_pallas"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, unary_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...]
+    mag = jnp.abs(a)
+    sgn = jnp.sign(a)
+
+    def unary_step(u, acc):
+        # column-counter tick u: unary bitline asserted while count > u
+        a_u = jnp.where(mag > u, sgn, 0).astype(jnp.int8)
+        return acc + jnp.dot(a_u, b, preferred_element_type=jnp.int32)
+
+    o_ref[...] = jax.lax.fori_loop(0, unary_steps, unary_step, o_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bitwidth", "block_m", "block_n", "block_k", "interpret"),
+)
+def temporal_unary_gemm_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bitwidth: int,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """A (M, K) int · B (K, N) int → (M, N) int32 via 2**(w-1) unary steps."""
+    if bitwidth > 8:
+        raise ValueError("temporal decomposition beyond 8 bits is impractical")
+    unary_steps = 2 ** (bitwidth - 1)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    grid = (M // block_m, N // block_n, K // block_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, unary_steps=unary_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.int8), b.astype(jnp.int8))

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: exact int8 GEMM with int32 accumulation (tuGEMM contract).
+
+The TPU-native embodiment of tuGEMM's mathematical contract (DESIGN.md §2A):
+``Y = A @ B + C`` exactly, in low precision, with wide accumulators. On the
+MXU one systolic pass computes what the parallel tuGEMM's N vector counters
+produce over ``(2**(w-1))**2`` cycles — the MXU *is* the unary decomposition
+taken to full hardware parallelism.
+
+Blocking: grid = (M/bm, N/bn, K/bk), K innermost so each (bm, bn) output
+block stays resident in VMEM across the K-reduction (revisit-accumulate
+pattern). Block shapes default to MXU-aligned multiples of 128; the ops.py
+wrapper pads arbitrary shapes. VMEM working set per step =
+bm·bk + bk·bn (int8) + bm·bn (int32) — 128·128 blocks ≈ 96 KiB ≪ 16 MiB VMEM;
+defaults chosen larger (256·512) to amortize grid overhead while staying
+< 2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["matmul_int8_pallas"]
+
+
+def _kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+def _kernel_with_c(a_ref, b_ref, c_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        # output counters initialize with binary-loaded C (paper §II-B)
+        o_ref[...] = c_ref[...].astype(jnp.int32)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_int8_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray | None = None,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """A (M, K) int8 · B (K, N) int8 [+ C (M, N) int32] → (M, N) int32.
+
+    Shapes must already be padded to block multiples (ops.py handles this).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        (M, N, K),
+        (block_m, block_n, block_k),
+    )
+    grid = (M // block_m, N // block_n, K // block_k)
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+    ]
+    operands = [a, b]
+    kernel = functools.partial(_kernel, n_k=grid[2])
+    if c is not None:
+        in_specs.append(pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)))
+        operands.append(c.astype(jnp.int32))
+        kernel = functools.partial(_kernel_with_c, n_k=grid[2])
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(*operands)

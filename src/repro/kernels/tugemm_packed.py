@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: plane-packed int4 / int2 GEMM (sub-byte tuGEMM).
+
+tuGEMM's headline result is that halving bit-width halves hardware cost; the
+TPU analogue is halving *HBM traffic* for the (weight) operand. Weights are
+packed 2 (int4) or 4 (int2) values per int8 byte in *plane* layout
+(kernels/packing.py): plane p of packed row k holds ``W[k + p·K/planes]``.
+
+Because GEMM accumulation is K-order-independent, each grid step unpacks one
+(bk_packed, bn) packed block into ``planes`` sign-extended int8 blocks and
+accumulates ``A_plane_p @ unpack_p`` — the A operand is passed once per plane
+with a plane-offset index map, so no in-VMEM interleave/transpose is ever
+needed and every unpacked plane feeds the MXU directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .packing import unpack_plane
+
+__all__ = ["matmul_packed_pallas"]
+
+
+def _kernel(*refs, bits: int, planes: int):
+    a_refs, bp_ref, o_ref = refs[:planes], refs[planes], refs[planes + 1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref[...]
+    packed = bp_ref[...]
+    for p in range(planes):
+        b_plane = unpack_plane(packed, bits, p)
+        acc += jnp.dot(a_refs[p][...], b_plane, preferred_element_type=jnp.int32)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_m", "block_n", "block_k", "interpret")
+)
+def matmul_packed_pallas(
+    a: jnp.ndarray,
+    packed_b: jnp.ndarray,
+    *,
+    bits: int,
+    block_m: int = 256,
+    block_n: int = 512,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """A (M, K) int8 · packed B (K/planes, N) int8 → (M, N) int32.
+
+    ``block_k`` is in *packed* rows; per grid step the kernel consumes
+    ``planes * block_k`` logical K. K must equal ``planes * packed_b.shape[0]``
+    and all dims must be pre-padded to block multiples (ops.py).
+    """
+    planes = {4: 2, 2: 4}[bits]
+    M, K = a.shape
+    Kp, N = packed_b.shape
+    assert K == planes * Kp, (a.shape, packed_b.shape, bits)
+    assert M % block_m == 0 and N % block_n == 0 and Kp % block_k == 0
+    grid = (M // block_m, N // block_n, Kp // block_k)
+    n_kp_blocks = Kp // block_k
+
+    # A is passed `planes` times; plane p's index map offsets by p*Kp rows.
+    def a_map(p):
+        return lambda i, j, k, _p=p: (i, k + _p * n_kp_blocks)
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), a_map(p)) for p in range(planes)
+    ] + [pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j))]
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, planes=planes),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(*([a] * planes), packed_b)

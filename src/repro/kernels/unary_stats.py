@@ -1,0 +1,80 @@
+"""Pallas TPU kernels: fused tuGEMM latency-statistics reductions.
+
+The hardware's data-dependent cycle count for outer-product step k is
+``max_m |A[m,k]| * max(max_p |B[k,p]|, 1)`` (core/tugemm.py). These kernels
+compute the two absmax reductions as single passes over A and B — O(MK+KN)
+bytes, negligible next to the GEMM itself — so profiling real workloads
+(Fig 5 methodology) costs one extra memory sweep, not a second GEMM.
+
+Kept separate from the matmul kernel: fusing a (K,)-indexed reduction into a
+(M,N,K)-grid matmul would force non-consecutive output-block revisits
+(repeated HBM spills) for no traffic win.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["colabsmax_pallas", "rowabsmax_pallas"]
+
+
+def _colmax_kernel(x_ref, o_ref):
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blockmax = jnp.abs(x_ref[...].astype(jnp.int32)).max(axis=0, keepdims=True)
+    o_ref[...] = jnp.maximum(o_ref[...], blockmax)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def colabsmax_pallas(
+    x: jnp.ndarray, *, block_m: int = 256, block_k: int = 512, interpret: bool = False
+) -> jnp.ndarray:
+    """max over axis 0 of |X|: (M, K) int8 → (1, K) int32 (A-side stats)."""
+    M, K = x.shape
+    assert M % block_m == 0 and K % block_k == 0
+    grid = (K // block_k, M // block_m)  # m innermost: output block stays resident
+    return pl.pallas_call(
+        _colmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_k), lambda k, m: (m, k))],
+        out_specs=pl.BlockSpec((1, block_k), lambda k, m: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((1, K), jnp.int32),
+        interpret=interpret,
+    )(x)
+
+
+def _rowmax_kernel(x_ref, o_ref):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blockmax = jnp.abs(x_ref[...].astype(jnp.int32)).max(axis=1, keepdims=True)
+    o_ref[...] = jnp.maximum(o_ref[...], blockmax)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n", "interpret"))
+def rowabsmax_pallas(
+    x: jnp.ndarray, *, block_k: int = 256, block_n: int = 512, interpret: bool = False
+) -> jnp.ndarray:
+    """max over axis 1 of |X|: (K, N) int8 → (K, 1) int32 (B-side stats)."""
+    K, N = x.shape
+    assert K % block_k == 0 and N % block_n == 0
+    grid = (K // block_k, N // block_n)  # n innermost
+    return pl.pallas_call(
+        _rowmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_k, block_n), lambda k, n: (k, n))],
+        out_specs=pl.BlockSpec((block_k, 1), lambda k, n: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, 1), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,5 @@
+"""Launch layer: production mesh, multi-pod dry-run, train/serve CLIs."""
+
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,293 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every live (arch × shape × mesh) cell.
+
+For each cell this builds the real step function (train_step for ``train_4k``,
+serve prefill for ``prefill_32k``, serve decode for ``decode_32k`` /
+``long_500k``), attaches explicit NamedShardings to every input leaf
+(params via logical axes; optimizer state mirroring params; caches in the
+serving layout), lowers with ShapeDtypeStruct stand-ins (no allocation),
+compiles, and records:
+
+- ``memory_analysis``   -> proves the cell fits 16 GB/chip
+- ``cost_analysis``     -> per-chip FLOPs / bytes for §Roofline
+- optimized-HLO collective bytes (parsed)  -> the collective roofline term
+
+Results land in ``experiments/dryrun/<cell>.json`` + a summary table.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod    # 512-chip mesh
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.archs import ASSIGNED
+from ..configs.base import SHAPES, RunConfig, get_config
+from ..models import model_flops
+from ..models.model import input_specs
+from ..parallel.sharding import use_mesh
+from ..parallel.state_sharding import (
+    abstract_caches,
+    abstract_train_state,
+    batch_sharding,
+    cache_sharding,
+    train_state_sharding,
+    with_sharding,
+)
+from ..roofline import analyze
+from .mesh import make_production_mesh
+
+# ---------------------------------------------------------------- cell plan
+SKIPS: dict[tuple, str] = {
+    ("qwen3-0.6b", "long_500k"): "pure full attention — quadratic at 500k (DESIGN.md §4)",
+    ("qwen3-8b", "long_500k"): "pure full attention — quadratic at 500k",
+    ("qwen3-14b", "long_500k"): "pure full attention — quadratic at 500k",
+    ("smollm-360m", "long_500k"): "pure full attention — quadratic at 500k",
+    ("llama4-maverick-400b-a17b", "long_500k"): "pure full attention — quadratic at 500k",
+    ("deepseek-v2-lite-16b", "long_500k"): "pure full attention — quadratic at 500k",
+    ("qwen2-vl-7b", "long_500k"): "pure full attention — quadratic at 500k",
+    ("hubert-xlarge", "decode_32k"): "encoder-only — no decode step",
+    ("hubert-xlarge", "long_500k"): "encoder-only — no decode step",
+}
+
+
+def live_cells():
+    for arch in ASSIGNED:
+        for shape in SHAPES.values():
+            if (arch, shape.name) not in SKIPS:
+                yield arch, shape
+
+
+def cell_runconfig(arch: str, shape, optimized: bool = False) -> RunConfig:
+    """Baseline RunConfig per cell (paper-faithful defaults; §Perf iterates).
+
+    ``optimized=True`` applies the §Perf hillclimb outcomes: TP-stationary
+    serving weights (no FSDP gather per token), sequence-parallel prefill,
+    int8 KV cache for decode, microbatched grad accumulation where the
+    baseline did not fit.
+    """
+    kw: dict = dict(dtype="bfloat16", param_dtype="bfloat16")
+    if shape.kind == "train":
+        kw.update(remat="block", scan_layers=True)
+        # sequence parallelism for the residual stream: without it the
+        # per-chip saved carries alone exceed HBM for the >=7B configs
+        kw["sharding_overrides"] = {"seq": "model"}
+        if arch == "llama4-maverick-400b-a17b":
+            # fp32 moments do not fit 16 GB/chip at 400B/256 chips (DESIGN §5)
+            kw.update(moments_dtype="int8")
+            if optimized:
+                kw.update(microbatches=4)
+    else:
+        kw.update(remat="none", scan_layers=True)
+        if optimized:
+            from ..models.model import count_params
+
+            overrides = {}
+            # serving: weights stationary on `model` (TP), no per-token FSDP
+            # all-gather — only when the TP shard fits comfortably
+            # (llama4-maverick's 400B params need FSDP even at serve time)
+            params_gb_per_chip = count_params(get_config(arch)) * 2 / 16 / 1e9
+            if params_gb_per_chip < 8.0:
+                overrides["embed"] = None
+            if shape.kind == "prefill":
+                overrides["seq"] = "model"
+            kw["sharding_overrides"] = overrides
+            if shape.kind == "decode":
+                kw.update(kv_cache_dtype="int8")
+    return RunConfig(**kw)
+
+
+# ------------------------------------------------------------------- lowering
+def build_cell(arch: str, shape, rc: RunConfig):
+    """Returns (fn, abstract_args, jit_kwargs) for lowering under a mesh ctx.
+
+    Donation mirrors production: the trainer donates the train state, the
+    serving engine donates the KV/SSM caches. Without donation XLA must
+    materialize a second copy of the cache (full-cache copy per token)."""
+    cfg = get_config(arch)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from ..train.train_step import build_train_step
+
+        state_abs = abstract_train_state(cfg, rc)
+        state_sh = with_sharding(state_abs, train_state_sharding(cfg, rc, state_abs))
+        batch_sh = with_sharding(specs, batch_sharding(specs))
+        return build_train_step(cfg, rc), (state_sh, batch_sh), {"donate_argnums": (0,)}
+
+    from ..serve import build_decode, build_prefill
+
+    if rc.gemm_backend != "bf16" and rc.gemm_mode == "prequant":
+        from ..parallel.state_sharding import abstract_prequant_params, prequant_param_sharding
+
+        params_abs = abstract_prequant_params(cfg, rc)
+        params_sh = with_sharding(params_abs, prequant_param_sharding(cfg, rc, params_abs))
+    else:
+        from ..models import param_sharding
+        from ..parallel.sharding import shape_structs
+        from ..models import model_spec
+
+        params_abs = shape_structs(model_spec(cfg), jnp.dtype(rc.param_dtype))
+        params_sh = with_sharding(params_abs, param_sharding(cfg, rc))
+    caches_abs = abstract_caches(cfg, rc, shape.global_batch, shape.seq_len)
+    caches_sh = with_sharding(caches_abs, cache_sharding(cfg, rc, caches_abs))
+
+    def shd(tree):
+        return jax.tree.map(lambda x: x.sharding, tree)
+
+    if shape.kind == "prefill":
+        batch_sh = with_sharding(specs, batch_sharding(specs))
+        return (
+            build_prefill(cfg, rc),
+            (params_sh, caches_sh, batch_sh),
+            # out = (caches, last_logits); pin cache layout to the input's so
+            # donation aliases instead of copying/resharding the whole cache
+            {"donate_argnums": (1,), "out_shardings": (shd(caches_sh), None)},
+        )
+
+    # decode: (params, caches, tokens (B,1), pos scalar)
+    tokens_abs = specs.get("tokens") or jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32
+    )
+    tokens_sh = with_sharding(
+        {"tokens": tokens_abs}, batch_sharding({"tokens": tokens_abs})
+    )["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (
+        build_decode(cfg, rc),
+        (params_sh, caches_sh, tokens_sh, pos),
+        {"donate_argnums": (1,), "out_shardings": (shd(caches_sh), None)},
+    )
+
+
+def run_cell(
+    arch: str, shape, *, multi_pod: bool, out_dir: str | None = None, optimized: bool = False
+) -> dict:
+    cfg = get_config(arch)
+    rc = cell_runconfig(arch, shape, optimized=optimized)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    name = f"{arch}×{shape.name}×{'multi' if multi_pod else 'single'}"
+
+    t0 = time.time()
+    with use_mesh(mesh, overrides=rc.sharding_overrides):
+        fn, args, jit_kw = build_cell(arch, shape, rc)
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    dt = time.time() - t0
+
+    per_chip = getattr(mem, "temp_size_in_bytes", 0) + getattr(
+        mem, "argument_size_in_bytes", 0
+    ) + getattr(mem, "output_size_in_bytes", 0)
+    # arguments+outputs alias (donation) — peak live estimate:
+    peak = getattr(mem, "peak_memory_in_bytes", None) or (
+        getattr(mem, "argument_size_in_bytes", 0) + getattr(mem, "temp_size_in_bytes", 0)
+    )
+
+    report = analyze(
+        name,
+        chips=chips,
+        cost=cost if isinstance(cost, dict) else dict(cost),
+        hlo_text=hlo,
+        model_flops=model_flops(cfg, shape),
+        memory_per_chip=float(peak),
+    )
+    row = {
+        "cell": name,
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "compile_s": round(dt, 1),
+        "peak_bytes_per_chip": float(peak),
+        "argument_bytes_per_chip": float(getattr(mem, "argument_size_in_bytes", 0)),
+        "temp_bytes_per_chip": float(getattr(mem, "temp_size_in_bytes", 0)),
+        "hlo_flops_per_chip": report.hlo_flops,
+        "hlo_bytes_per_chip": report.hlo_bytes,
+        "collective_bytes_per_chip": report.collective_bytes,
+        "collectives": report.collectives,
+        "model_flops": report.model_flops,
+        "compute_s": report.compute_s,
+        "memory_s": report.memory_s,
+        "collective_s": report.collective_s,
+        "dominant": report.dominant,
+        "useful_ratio": report.useful_ratio,
+        "mfu": report.mfu,
+        "fits": bool(peak <= 16e9),
+        "xla_cost_flops": report.xla_cost_flops,
+        "unknown_trip_loops": report.unknown_trip_loops,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = name.replace("×", "_").replace("/", "-") + ".json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true", help="2×16×16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true", help="§Perf settings")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--keep-going", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cells = [
+        (a, s)
+        for a, s in live_cells()
+        if (args.arch is None or a == args.arch)
+        and (args.shape is None or s.name == args.shape)
+    ]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows, failures = [], []
+    for multi in meshes:
+        for arch, shape in cells:
+            label = f"{arch}×{shape.name}×{'multi' if multi else 'single'}"
+            try:
+                row = run_cell(arch, shape, multi_pod=multi, out_dir=args.out,
+                               optimized=args.optimized)
+                rows.append(row)
+                print(
+                    f"[ok]   {label}: peak {row['peak_bytes_per_chip']/1e9:.2f} GB/chip, "
+                    f"dominant={row['dominant']}, mfu={row['mfu']*100:.1f}%, "
+                    f"compile {row['compile_s']}s",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append((label, repr(e)))
+                print(f"[FAIL] {label}: {e!r}", flush=True)
+                traceback.print_exc()
+                if not args.keep_going:
+                    raise
+
+    print(f"\n{len(rows)} cells compiled, {len(failures)} failed")
+    for label, err in failures:
+        print(f"  FAIL {label}: {err[:200]}")
+    for arch, shape in SKIPS:
+        print(f"  SKIP {arch}×{shape}: {SKIPS[(arch, shape)]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

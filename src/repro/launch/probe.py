@@ -1,0 +1,155 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Perf-iteration probe: lower one cell with RunConfig/rule overrides and
+print the roofline forensics (three terms + top collectives by bytes + top
+HBM-byte instructions). The §Perf hypothesis→change→measure loop runs on
+this tool.
+
+    PYTHONPATH=src python -m repro.launch.probe --arch qwen3-8b --shape decode_32k \
+        --set kv_cache_dtype=int8 --rule embed=None
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+
+from ..configs.base import SHAPES, get_config
+from ..models import model_flops
+from ..parallel.sharding import use_mesh
+from ..roofline import analyze
+from ..roofline import hlo_parse as H
+from .dryrun import build_cell, cell_runconfig
+from .mesh import make_production_mesh
+
+
+def _coerce(v: str):
+    if v in ("None", "none", "null"):
+        return None
+    if v in ("True", "False"):
+        return v == "True"
+    for t in (int, float):
+        try:
+            return t(v)
+        except ValueError:
+            pass
+    return v
+
+
+def probe(arch, shape_name, sets=(), rules=(), multi_pod=False, dump=None, label="probe"):
+    shape = SHAPES[shape_name]
+    rc = cell_runconfig(arch, shape)
+    overrides = dict(rc.sharding_overrides)
+    kw = {}
+    for s in sets:
+        k, v = s.split("=", 1)
+        kw[k] = _coerce(v)
+    for r in rules:
+        k, v = r.split("=", 1)
+        overrides[k] = _coerce(v)
+    rc = dataclasses.replace(rc, **kw, sharding_overrides=overrides)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with use_mesh(mesh, overrides=overrides):
+        fn, args, jit_kw = build_cell(arch, shape, rc)
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    dt = time.time() - t0
+
+    peak = getattr(mem, "peak_memory_in_bytes", 0) or 0
+    cfg = get_config(arch)
+    rep = analyze(f"{arch}×{shape_name}", chips=mesh.size, hlo_text=hlo,
+                  model_flops=model_flops(cfg, shape), memory_per_chip=float(peak))
+    print(f"\n=== {label}: {arch}×{shape_name} (compile {dt:.0f}s, peak {peak/1e9:.2f} GB/chip)")
+    print(f"  compute {rep.compute_s*1e3:10.1f} ms   memory {rep.memory_s*1e3:10.1f} ms   "
+          f"collective {rep.collective_s*1e3:10.1f} ms   -> {rep.dominant} bound")
+    print(f"  useful_ratio {rep.useful_ratio:.2f}   roofline-fraction {rep.mfu*100:.2f}%")
+    print(f"  collectives: " + ", ".join(f"{k}={v/1e9:.1f}GB(n={rep.collectives and H.parse_hlo(hlo).collective_counts.get(k,0)})"
+                                          for k, v in sorted(rep.collectives.items(), key=lambda kv: -kv[1])))
+
+    # top-byte instructions forensics
+    comps, entry = H._split_computations(hlo)
+    types = {}
+    for ins in comps.values():
+        for it in ins:
+            types[it.name] = it.rtype
+    trips = {}
+    for ins in comps.values():
+        for it in ins:
+            if it.opcode == "while":
+                t = H._TRIP.search(it.rest)
+                b = re.search(r"body=%?([\w.-]+)", it.rest)
+                if t and b:
+                    trips[b.group(1)] = int(t.group(1))
+
+    def lead(ts):
+        m = H._SHAPE.search(ts)
+        return int(m.group(2).split(",")[0]) if m and m.group(2) else 0
+
+    charges = []
+    for cname, ins in comps.items():
+        m = trips.get(cname, 1 if cname == entry else 0)
+        if not m:
+            continue
+        trip = trips.get(cname, 0)
+        for it in ins:
+            if it.opcode in H._SKIP_BYTES:
+                continue
+            ops = H._OPERAND.findall(it.rest.split("), ")[0])
+            if it.opcode in ("dynamic-slice", "gather"):
+                tot = 2 * H._shape_bytes(it.rtype)
+            elif it.opcode in ("dynamic-update-slice", "scatter"):
+                tot = 2 * H._shape_bytes(types.get(ops[1], "")) if len(ops) > 1 else 0
+            else:
+                tot = H._shape_bytes(it.rtype)
+                if trip > 1 and lead(it.rtype) == trip:
+                    tot /= trip
+                for o in ops:
+                    t_ = types.get(o, "")
+                    b = H._shape_bytes(t_)
+                    if trip > 1 and lead(t_) == trip:
+                        b /= trip
+                    tot += b
+            charges.append((m * tot, trip, it.opcode, it.name, it.rtype[:48]))
+    charges.sort(reverse=True)
+    print("  top HBM charges:")
+    for c in charges[:10]:
+        print(f"    {c[0]/1e9:8.2f} GB  x{c[1]:<4} {c[2]:<16} {c[3][:28]:<28} {c[4]}")
+    # top collectives individually
+    colls = [c for c in charges if c[2] in H._COLLECTIVES]
+    if colls:
+        print("  top collectives:")
+        for c in colls[:8]:
+            print(f"    {c[0]/1e9:8.2f} GB  x{c[1]:<4} {c[2]:<16} {c[3][:28]:<28} {c[4]}")
+    if dump:
+        with open(dump, "w") as f:
+            f.write(hlo)
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[], help="RunConfig field=value")
+    ap.add_argument("--rule", action="append", default=[], help="sharding rule logical=mesh_axis")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dump", default=None, help="write optimized HLO to file")
+    ap.add_argument("--label", default="probe")
+    args = ap.parse_args()
+    probe(args.arch, args.shape, args.set, args.rule, args.multi_pod, args.dump, args.label)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Spins up the continuous-batching engine on synthetic prompts and reports
+throughput/latency; the same Engine drives examples/serve_lm.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs.base import RunConfig, get_config
+from ..models import init
+from ..parallel.sharding import use_mesh
+from ..serve import Engine, Request
+from .mesh import make_local_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--kv-dtype", default="bfloat16", choices=["bfloat16", "int8"])
+    ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    on_cpu = jax.default_backend() == "cpu"
+    dtype = "float32" if on_cpu else "bfloat16"
+    rc = RunConfig(
+        dtype=dtype, param_dtype=dtype, remat="none",
+        kv_cache_dtype=args.kv_dtype, gemm_backend=args.gemm_backend,
+    )
+    mesh = make_local_mesh(args.data, args.model)
+    rng = np.random.default_rng(args.seed)
+
+    with use_mesh(mesh):
+        params = init(cfg, rc, jax.random.PRNGKey(args.seed))
+        eng = Engine(
+            cfg, rc, params,
+            capacity=args.capacity, max_batch=args.max_batch,
+            temperature=args.temperature, seed=args.seed,
+        )
+        for rid in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
+            eng.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+
+    toks = sum(len(r.out) for r in done)
+    print(f"[serve] {args.arch}: {len(done)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    for r in done[:3]:
+        print(f"  req {r.rid}: {r.out[:8]}...")
+    return done
+
+
+if __name__ == "__main__":
+    main()

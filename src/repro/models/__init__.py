@@ -1,0 +1,29 @@
+"""Model zoo: unified backbone over dense / MoE / SSM / hybrid / encoder / VLM."""
+
+from .model import (
+    abstract_params,
+    active_params,
+    count_params,
+    init,
+    input_specs,
+    loss_fn,
+    model_flops,
+    param_sharding,
+)
+from .transformer import forward, init_caches, lm_logits, model_spec, plan_groups
+
+__all__ = [
+    "abstract_params",
+    "active_params",
+    "count_params",
+    "init",
+    "input_specs",
+    "loss_fn",
+    "model_flops",
+    "param_sharding",
+    "forward",
+    "init_caches",
+    "lm_logits",
+    "model_spec",
+    "plan_groups",
+]

@@ -1,0 +1,239 @@
+"""Attention variants: GQA (+qk_norm, RoPE/M-RoPE, SWA) and MLA (DeepSeek-V2).
+
+Decode uses a pre-allocated KV cache of static capacity (the assigned decode
+shapes fix capacity = seq_len); MLA caches the *compressed* kv latent and
+decodes in the absorbed form (no decompression — the production DeepSeek
+serving path). KV caches optionally store int8 with per-(token, head) scales
+(``kv_dtype="int8"``) — the tuGEMM low-precision thesis applied to cache
+traffic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParamSpec, constrain
+from ..quant.qlinear import GemmBackend, dense
+from .flash import blockwise_attention
+from .layers import apply_mrope, apply_rope, linear_spec, rms_norm, rms_norm_spec
+
+__all__ = [
+    "gqa_spec",
+    "gqa_attention",
+    "mla_spec",
+    "mla_attention",
+    "init_kv_cache",
+    "kv_cache_write",
+    "kv_cache_read",
+]
+
+
+# ------------------------------------------------------------------ KV cache
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
+    """Per-layer attention cache (unstacked; caller stacks per layer group)."""
+    hd = cfg.resolved_head_dim
+    if cfg.attn_type == "mla":
+        cache = {
+            "ckv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, capacity, cfg.qk_rope_head_dim), dtype),
+        }
+    else:
+        kv = cfg.num_kv_heads
+        cache = {
+            "k": jnp.zeros((batch, capacity, kv, hd), dtype),
+            "v": jnp.zeros((batch, capacity, kv, hd), dtype),
+        }
+    if dtype == jnp.int8:
+        for n in list(cache):
+            cache[n + "_scale"] = jnp.zeros((batch, capacity), jnp.float32)
+    return cache
+
+
+def _quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    # per-(batch, position) scale over heads*dim
+    amax = jnp.abs(x.astype(jnp.float32)).max(axis=tuple(range(2, x.ndim)))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / scale.reshape(scale.shape + (1,) * (x.ndim - 2)))
+    return jnp.clip(q, -128, 127).astype(jnp.int8), scale
+
+
+def kv_cache_write(cache: dict, names: tuple[str, str], new: tuple, pos) -> dict:
+    """Write one token's k/v (B, 1, ...) at position ``pos`` (static capacity)."""
+    out = dict(cache)
+    for name, val in zip(names, new):
+        buf = cache[name]
+        if buf.dtype == jnp.int8:
+            q, s = _quantize_kv(val)
+            out[name] = jax.lax.dynamic_update_slice_in_dim(buf, q, pos, axis=1)
+            sk = name + "_scale"
+            out[sk] = jax.lax.dynamic_update_slice_in_dim(
+                cache[sk], s.astype(jnp.float32), pos, axis=1
+            )
+        else:
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), pos, axis=1
+            )
+    return out
+
+
+def kv_cache_read(cache: dict, name: str, compute_dtype) -> jnp.ndarray:
+    buf = cache[name]
+    if buf.dtype == jnp.int8:
+        s = cache[name + "_scale"]
+        return (
+            buf.astype(jnp.float32) * s.reshape(s.shape + (1,) * (buf.ndim - 2))
+        ).astype(compute_dtype)
+    return buf.astype(compute_dtype)
+
+
+# ----------------------------------------------------------------------- GQA
+def gqa_spec(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    spec = {
+        "wq": linear_spec(d, h * hd, ("embed", "heads")),
+        "wk": linear_spec(d, kv * hd, ("embed", "kv_heads")),
+        "wv": linear_spec(d, kv * hd, ("embed", "kv_heads")),
+        "wo": linear_spec(h * hd, d, ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = rms_norm_spec(hd)
+        spec["k_norm"] = rms_norm_spec(hd)
+    return spec
+
+
+def gqa_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,                 # (B, S, D)
+    positions: jnp.ndarray,         # (B, S) or (3, B, S) for M-RoPE
+    *,
+    backend: GemmBackend,
+    cache: dict | None = None,
+    cache_pos=None,                 # scalar write position (decode)
+    is_global: bool = True,         # False -> sliding window
+    chunk: int = 1024,
+) -> tuple[jnp.ndarray, dict | None]:
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    q = dense(p["wq"], x, backend=backend, name="attn.q").reshape(B, S, h, hd)
+    k = dense(p["wk"], x, backend=backend, name="attn.k").reshape(B, S, kv, hd)
+    v = dense(p["wv"], x, backend=backend, name="attn.v").reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.rms_eps)
+        k = rms_norm(p["k_norm"], k, cfg.rms_eps)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.attn_type != "none":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # "seq" first: under sequence-parallel overrides the duplicate-mesh-axis
+    # guard then drops act_heads, giving seq-sharded attention (for GQA the
+    # gathered K/V are only (2·kv/H)·D bytes — cheaper than gathering x);
+    # without SP, act_heads shards on model when the head count divides.
+    q = constrain(q, "batch", "seq", "act_heads", None)
+
+    window = None if is_global else cfg.sliding_window
+    if cache is not None:
+        cache = kv_cache_write(cache, ("k", "v"), (k, v), cache_pos)
+        k_full = kv_cache_read(cache, "k", x.dtype)
+        v_full = kv_cache_read(cache, "v", x.dtype)
+        capacity = k_full.shape[1]
+        out = blockwise_attention(
+            q,
+            k_full,
+            v_full,
+            q_offset=cache_pos,
+            kv_len=jnp.minimum(
+                jnp.asarray(cache_pos, jnp.int32) + S, capacity
+            ),
+            causal=cfg.causal,
+            window=window,
+            chunk=chunk,
+        )
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=cfg.causal, window=window, chunk=chunk,
+            softcap=cfg.attn_logit_softcap,
+        )
+    out = constrain(out, "batch", "seq", "act_heads", None)
+    y = dense(p["wo"], out.reshape(B, S, h * hd), backend=backend, name="attn.o")
+    return y, cache
+
+
+# ----------------------------------------------------------------------- MLA
+def mla_spec(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    vd, lora = cfg.v_head_dim, cfg.kv_lora_rank
+    return {
+        "wq": linear_spec(d, h * (nope + rope_d), ("embed", "heads")),
+        "w_dkv": linear_spec(d, lora + rope_d, ("embed", "kv_lora")),
+        "kv_norm": rms_norm_spec(lora),
+        "w_uk": {"kernel": ParamSpec((lora, h, nope), ("kv_lora", "heads", "qk_dim"))},
+        "w_uv": {"kernel": ParamSpec((lora, h, vd), ("kv_lora", "heads", "qk_dim"))},
+        "wo": linear_spec(h * vd, d, ("heads", "embed")),
+    }
+
+
+def mla_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    backend: GemmBackend,
+    cache: dict | None = None,
+    cache_pos=None,
+    chunk: int = 1024,
+    **_unused,
+) -> tuple[jnp.ndarray, dict | None]:
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    vd, lora = cfg.v_head_dim, cfg.kv_lora_rank
+    scale_dim = nope + rope_d
+
+    q = dense(p["wq"], x, backend=backend, name="mla.q").reshape(B, S, h, scale_dim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = dense(p["w_dkv"], x, backend=backend, name="mla.dkv")
+    ckv, k_rope = dkv[..., :lora], dkv[..., lora:]
+    ckv = rms_norm(p["kv_norm"], ckv, cfg.rms_eps)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    # absorbed form: q_abs[b,s,h,:] = q_nope · W_uk[:,h,:]^T  (lives in latent space)
+    q_abs = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       p["w_uk"]["kernel"].astype(jnp.float32)).astype(x.dtype)
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)          # (B,S,h,lora+rope)
+
+    if cache is not None:
+        cache = kv_cache_write(
+            cache, ("ckv", "kr"), (ckv, k_rope), cache_pos
+        )
+        ckv_full = kv_cache_read(cache, "ckv", x.dtype)
+        kr_full = kv_cache_read(cache, "kr", x.dtype)
+        kv_len = jnp.minimum(
+            jnp.asarray(cache_pos, jnp.int32) + S, ckv_full.shape[1]
+        )
+        q_offset = cache_pos
+    else:
+        ckv_full, kr_full, kv_len, q_offset = ckv, k_rope, None, 0
+
+    # MQA in latent space: K = [ckv ; k_rope] (single head), V = ckv
+    k_eff = jnp.concatenate([ckv_full, kr_full], axis=-1)[:, :, None, :]
+    v_eff = ckv_full[:, :, None, :]
+    # score scale must be 1/sqrt(nope+rope), not 1/sqrt(lora+rope):
+    # blockwise_attention scales by k dim; compensate.
+    comp = ((lora + rope_d) ** 0.5) / (scale_dim ** 0.5)
+    ctx = blockwise_attention(
+        q_eff * comp, k_eff, v_eff,
+        q_offset=q_offset, kv_len=kv_len, causal=cfg.causal, chunk=chunk,
+    )                                                          # (B,S,h,lora)
+    out = jnp.einsum("bshl,lhv->bshv", ctx.astype(jnp.float32),
+                     p["w_uv"]["kernel"].astype(jnp.float32)).astype(x.dtype)
+    y = dense(p["wo"], out.reshape(B, S, h * vd), backend=backend, name="mla.o")
+    return y, cache

@@ -1,0 +1,149 @@
+"""Model dispatcher: one public surface over the whole zoo.
+
+- ``init(cfg, rc, key)``            materialized params
+- ``abstract_params(cfg, rc)``      ShapeDtypeStruct tree (dry-run, no alloc)
+- ``param_sharding(cfg, rc)``       NamedSharding tree under the active mesh
+- ``loss_fn(cfg, rc, params, batch)``  chunked LM / masked-prediction loss
+- ``input_specs(cfg, shape)``       ShapeDtypeStruct stand-ins for every input
+- ``count_params / model_flops``    6·N·D accounting (MoE: active params)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..parallel.sharding import materialize, shape_structs, tree_sharding
+from .transformer import forward, lm_logits, model_spec, plan_groups
+
+__all__ = [
+    "init",
+    "abstract_params",
+    "param_sharding",
+    "loss_fn",
+    "input_specs",
+    "count_params",
+    "active_params",
+    "model_flops",
+]
+
+
+def init(cfg: ModelConfig, rc: RunConfig, key) -> dict:
+    return materialize(model_spec(cfg), key, jnp.dtype(rc.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig, rc: RunConfig):
+    return shape_structs(model_spec(cfg), jnp.dtype(rc.param_dtype))
+
+
+def param_sharding(cfg: ModelConfig, rc: RunConfig):
+    return tree_sharding(model_spec(cfg))
+
+
+# --------------------------------------------------------------------- loss
+def _xent_chunk(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray):
+    """Token cross-entropy over one chunk. logits (B,C,V) f32-reduced."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def loss_fn(cfg: ModelConfig, rc: RunConfig, params: dict, batch: dict):
+    """Mean token loss + aux. Logits are computed per sequence chunk so the
+    (B, S, vocab) tensor never materializes at once beyond chunk size (vocab
+    202k × seq 4k × batch would otherwise dominate activation memory)."""
+    h, _, aux = forward(cfg, rc, params, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+    S = h.shape[1]
+    chunk = min(512, S)
+    n_chunks = max(1, S // chunk)
+
+    if S % chunk == 0 and n_chunks > 1:
+        B = h.shape[0]
+        hc = h.reshape(B, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+        mc = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            hs, ls, ms = xs
+            logits = lm_logits(cfg, rc, params, hs)
+            nll, cnt = _xent_chunk(logits, ls, ms)
+            return (carry[0] + nll, carry[1] + cnt), None
+
+        (nll, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc, mc)
+        )
+    else:
+        logits = lm_logits(cfg, rc, params, h)
+        nll, cnt = _xent_chunk(logits, labels, mask)
+
+    loss = nll / jnp.maximum(cnt, 1.0)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one step's inputs (no allocation).
+
+    train:   full-sequence batch with labels.
+    prefill: full-sequence batch (no labels).
+    decode:  one new token per sequence (S=1); the KV/SSM cache is part of
+             the step state, not the input specs (see serve.engine).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        if cfg.frontend == "audio":
+            return {"embeds": jax.ShapeDtypeStruct((b, s, 512), jnp.float32)}
+        d = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.mrope_sections is not None:
+            d["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return d
+
+    if shape.kind == "train":
+        out = tok(B, S)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return out
+    if shape.kind == "prefill":
+        return tok(B, S)
+    # decode: single token against a seq_len-capacity cache
+    return tok(B, 1)
+
+
+# --------------------------------------------------------------- accounting
+def count_params(cfg: ModelConfig) -> int:
+    spec = model_spec(cfg)
+    leaves = jax.tree.leaves(spec, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k + shared experts only)."""
+    if cfg.num_experts == 0:
+        return count_params(cfg)
+    total = count_params(cfg)
+    ff = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * ff
+    n_moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+    inactive = n_moe_layers * (cfg.num_experts - cfg.num_experts_per_tok) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D with N = active params (MoE) — the §Roofline
+    'useful compute' yardstick. Decode counts one token per sequence."""
+    n = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded grouped dispatch.
+
+Dispatch is **grouped scatter** (not one-hot einsum): tokens are grouped by
+batch row, each group scatters its tokens into a local ``(E, cap_g, D)``
+buffer with ``.at[dest].set`` (dest = expert * cap_g + slot, slot from a
+per-group cumsum; overflow beyond ``capacity_factor`` is dropped — standard
+TPU practice, the aux load-balance loss keeps drops rare). This keeps every
+scatter local to its group (no cross-shard scatter), and the only collective
+is the explicit EP resharding of the dispatched activations from
+``batch``-sharded groups to ``model``-sharded experts — an all-to-all under
+SPMD, exactly the communication an expert-parallel system must pay.
+
+A one-hot-einsum dispatch would materialize a ``(T, E, cap)`` mask — for
+llama4-maverick train_4k that is 2.6 PB; the grouped scatter needs only the
+inherent ``(E, cap, D)`` dispatched activations.
+
+Shared experts (DeepSeek-V2 / Llama-4) are always-on FFNs added to the routed
+output. Expert FFN matmuls are batched GEMMs routed through quant.qlinear —
+the tuGEMM backend applies per expert exactly as for dense layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParamSpec, constrain
+from ..quant.qlinear import GemmBackend, dense
+from .layers import linear_spec, mlp, mlp_spec
+
+__all__ = ["moe_spec", "moe_ffn", "moe_capacity"]
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    spec = {
+        "router": linear_spec(d, e, ("embed", None), scale=0.02 / d**0.5),
+        "experts": {
+            "w_gate": ParamSpec((e, d, ff), ("experts", "embed", "mlp")),
+            "w_up": ParamSpec((e, d, ff), ("experts", "embed", "mlp")),
+            "w_down": ParamSpec((e, ff, d), ("experts", "mlp", "embed")),
+        },
+    }
+    if cfg.num_shared_experts:
+        spec["shared"] = mlp_spec(d, (cfg.moe_d_ff or cfg.d_ff) * cfg.num_shared_experts)
+    return spec
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.num_experts_per_tok * tokens_per_group / cfg.num_experts)
+    return max(4, min(cap, tokens_per_group))
+
+
+def _dispatch_group(xg: jnp.ndarray, idx: jnp.ndarray, E: int, cap: int):
+    """One group's dispatch, gather-formulated.
+
+    xg: (gs, D) tokens; idx: (gs, k) expert ids.
+    Returns (xin (E*cap, D), dest (gs*k,), E*cap = dropped).
+
+    Only the tiny int32 slot->token inverse map is scattered; the D-wide
+    token rows move via a gather. Scattering the rows directly made the SPMD
+    partitioner fall back to replicate+all-reduce on the full (G, E·cap, D)
+    buffer (hundreds of GB/chip/step measured on deepseek train_4k)."""
+    gs, k = idx.shape
+    flat_e = idx.reshape(gs * k)                                   # token-major order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (gs*k, E)
+    slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1       # slot within expert
+    ok = slot < cap
+    dest = jnp.where(ok, flat_e * cap + slot, E * cap)             # E*cap = trash slot
+    inv = (
+        jnp.full((E * cap + 1,), gs * k, jnp.int32)
+        .at[dest]
+        .set(jnp.arange(gs * k, dtype=jnp.int32), mode="drop")[: E * cap]
+    )                                                              # slot -> token index
+    x_rep = jnp.repeat(xg, k, axis=0)                              # (gs*k, D)
+    xpad = jnp.concatenate([x_rep, jnp.zeros((1, xg.shape[-1]), xg.dtype)], 0)
+    xin = xpad[jnp.minimum(inv, gs * k)]                           # empty slot -> 0
+    return xin, dest
+
+
+def moe_ffn(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    backend: GemmBackend,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+
+    logits = dense(p["router"], x, backend=GemmBackend("bf16"), name="moe.router")
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)      # (B, S, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                    # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (token fraction)_e * (mean prob)_e
+    me = probs.mean((0, 1))
+    ce = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32).mean((0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # group = (batch row × seq shard): under sequence parallelism the
+    # residual is seq-sharded on `model`; aligning dispatch groups with the
+    # shards keeps the cumsum/scatter entirely chip-local (group = full rows
+    # would all-gather x and build model×-bigger dispatch buffers — measured
+    # 44 s of collectives per step on deepseek train_4k)
+    from ..parallel.sharding import current_ctx
+
+    ctx = current_ctx()
+    ng = 1
+    if ctx is not None and ctx.rules.get("seq") == "model" and ctx.rules.get("moe_sharded_groups"):
+        m = ctx.axis_size("model")
+        if S % m == 0 and S // m >= 8:
+            ng = m
+    gs = S // ng
+    cap = moe_capacity(cfg, gs)
+    G = B * ng
+    group_axis = "group" if ng > 1 else "batch"
+    xg_all = constrain(x.reshape(G, gs, D), group_axis, None, None)
+    idx_g = gate_idx.reshape(G, gs, k)
+
+    xin, dest = jax.vmap(lambda xg, ig: _dispatch_group(xg, ig, E, cap))(
+        xg_all, idx_g
+    )                                                                # (G,E*cap,D), (G,gs*k)
+
+    # EP resharding: groups (batch/seq-sharded) -> experts (model-sharded).
+    # The token dim keeps its data sharding so this lowers to an all-to-all
+    # over `model` (leaving it unconstrained made XLA all-gather the whole
+    # dispatched buffer: 1.7 TB/chip/step measured on deepseek train_4k).
+    xin = xin.reshape(G, E, cap, D).transpose(1, 0, 2, 3).reshape(E, G * cap, D)
+    xin = constrain(xin, "experts", "group_data", None)
+
+    g = jax.vmap(lambda wi, xi: dense({"kernel": wi}, xi, backend=backend, name="moe.gate"))(
+        p["experts"]["w_gate"], xin
+    )
+    u = jax.vmap(lambda wi, xi: dense({"kernel": wi}, xi, backend=backend, name="moe.up"))(
+        p["experts"]["w_up"], xin
+    )
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "experts", "group_data", None)
+    yout = jax.vmap(lambda wi, xi: dense({"kernel": wi}, xi, backend=backend, name="moe.down"))(
+        p["experts"]["w_down"], h
+    )                                                                # (E, B*cap, D)
+
+    # reshard back: experts -> groups
+    yg = yout.reshape(E, G, cap, D).transpose(1, 0, 2, 3).reshape(G, E * cap, D)
+    yg = constrain(yg, group_axis, None, None)
+
+    def combine_group(yb, destb, gateb):
+        # yb: (E*cap, D); destb: (gs*k,); gateb: (gs, k)
+        ypad = jnp.concatenate([yb, jnp.zeros((1, D), yb.dtype)], axis=0)
+        got = ypad[jnp.minimum(destb, E * cap)]                      # (gs*k, D), dropped->0
+        got = got.reshape(gs, k, D) * gateb[..., None].astype(yb.dtype)
+        return got.sum(1)
+
+    gates_g = gate_vals.reshape(G, gs, k)
+    y = jax.vmap(combine_group)(yg, dest, gates_g).reshape(B, S, D)
+    if cfg.num_shared_experts:
+        y = y + mlp(p["shared"], x, backend=backend, name="moe.shared")
+    return y, aux

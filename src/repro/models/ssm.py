@@ -1,0 +1,154 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba / hymba's SSM heads).
+
+Training/prefill runs the linear recurrence ``h_t = a_t * h_{t-1} + b_t`` with
+``jax.lax.associative_scan`` over the sequence (O(S) memory per state slot,
+log-depth compute — the TPU-native embodiment of the "parallel" variant's
+insight: independent steps can be computed concurrently). Decode is a single
+O(1) state update against an SSM-state + conv-state cache; no KV cache, which
+is why the SSM archs run the ``long_500k`` cell.
+
+All projections (in/x/dt/out) route through the quant.qlinear GEMM backend —
+the tuGEMM integration boundary. The depthwise conv and the elementwise
+recurrence stay in floating point (non-GEMM ops, same boundary the paper
+draws).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import ParamSpec, constrain
+from ..quant.qlinear import GemmBackend, dense
+from .layers import linear_spec
+
+__all__ = [
+    "mamba_spec",
+    "mamba_mixer",
+    "mamba_decode_step",
+    "init_ssm_state",
+]
+
+
+def mamba_spec(cfg: ModelConfig) -> dict:
+    d, di, n, r, ck = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.dt_rank,
+        cfg.ssm_conv,
+    )
+    return {
+        "in_proj": linear_spec(d, 2 * di, ("embed", "inner")),
+        "conv_w": ParamSpec((ck, di), ("conv", "inner"), init="normal", scale=0.1),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "x_proj": linear_spec(di, r + 2 * n, ("inner", "dt")),
+        "dt_w": linear_spec(r, di, ("dt", "inner")),
+        "dt_bias": ParamSpec((di,), ("inner",), init="dt_bias"),
+        "A_log": ParamSpec((di, n), ("inner", "state"), init="hippo"),
+        "D": ParamSpec((di,), ("inner",), init="ones"),
+        "out_proj": linear_spec(di, d, ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, di), w: (ck, di) -> (B, S, di)."""
+    ck = w.shape[0]
+    xf = x.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (ck - 1, 0), (0, 0)))
+    y = sum(
+        pad[:, j : j + x.shape[1], :] * w[j].astype(jnp.float32) for j in range(ck)
+    )
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, x: jnp.ndarray, *, backend: GemmBackend):
+    """Shared dt/B/C computation. x: (B, S, di) post-conv post-silu."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    dbc = dense(p["x_proj"], x, backend=backend, name="ssm.x_proj")
+    dt_low, B_, C_ = jnp.split(dbc.astype(jnp.float32), [r, r + n], axis=-1)
+    dt = dense(p["dt_w"], dt_low.astype(x.dtype), backend=backend, name="ssm.dt")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, n), always negative
+    return dt, B_, C_, A
+
+
+def mamba_mixer(
+    cfg: ModelConfig,
+    p: dict,
+    u: jnp.ndarray,  # (B, S, D)
+    *,
+    backend: GemmBackend,
+    return_state: bool = False,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Full-sequence selective scan (training / prefill)."""
+    di = cfg.d_inner
+    xz = dense(p["in_proj"], u, backend=backend, name="ssm.in_proj")
+    x, z = jnp.split(xz, [di], axis=-1)
+    x = constrain(x, "batch", None, "act_inner")
+    x_conv = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x_act = jax.nn.silu(x_conv.astype(jnp.float32))
+
+    dt, B_, C_, A = _ssm_inputs(cfg, p, x_act.astype(u.dtype), backend=backend)
+    # discretize: a = exp(dt*A) (B,S,di,n); b = dt * B ⊙ x (B,S,di,n)
+    a = jnp.exp(dt[..., None] * A)                              # (B,S,di,n)
+    b = (dt * x_act)[..., None] * B_[:, :, None, :]             # (B,S,di,n)
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_s, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hs * C_[:, :, None, :]).sum(-1)                        # (B,S,di)
+    y = y + p["D"].astype(jnp.float32) * x_act
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = constrain(y.astype(u.dtype), "batch", None, "act_inner")
+    out = dense(p["out_proj"], y, backend=backend, name="ssm.out_proj")
+    if not return_state:
+        return out, None
+    state = {
+        "h": hs[:, -1].astype(jnp.float32),                     # (B,di,n)
+        "conv": x[:, -(cfg.ssm_conv - 1) :].astype(jnp.float32),  # (B,ck-1,di)
+    }
+    return out, state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32),
+    }
+
+
+def mamba_decode_step(
+    cfg: ModelConfig,
+    p: dict,
+    u: jnp.ndarray,  # (B, 1, D)
+    state: dict,
+    *,
+    backend: GemmBackend,
+) -> tuple[jnp.ndarray, dict]:
+    """O(1) single-token state update."""
+    di = cfg.d_inner
+    xz = dense(p["in_proj"], u, backend=backend, name="ssm.in_proj")
+    x, z = jnp.split(xz, [di], axis=-1)                         # (B,1,di)
+    conv_in = jnp.concatenate(
+        [state["conv"], x.astype(jnp.float32)], axis=1
+    )                                                           # (B,ck,di)
+    xc = (conv_in * p["conv_w"].astype(jnp.float32)[None]).sum(1) + p[
+        "conv_b"
+    ].astype(jnp.float32)                                       # (B,di)
+    x_act = jax.nn.silu(xc)[:, None, :]                         # (B,1,di)
+
+    dt, B_, C_, A = _ssm_inputs(cfg, p, x_act.astype(u.dtype), backend=backend)
+    a = jnp.exp(dt[..., None] * A)                              # (B,1,di,n)
+    b = (dt * x_act)[..., None] * B_[:, :, None, :]
+    h = state["h"] * a[:, 0] + b[:, 0]                          # (B,di,n)
+    y = (h * C_[:, 0, None, :]).sum(-1)[:, None, :]             # (B,1,di)
+    y = y + p["D"].astype(jnp.float32) * x_act
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(u.dtype), backend=backend, name="ssm.out_proj")
+    new_state = {"h": h, "conv": conv_in[:, 1:]}
+    return out, new_state

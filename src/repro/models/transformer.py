@@ -1,0 +1,350 @@
+"""Unified backbone for every assigned family: dense / MoE / SSM / hybrid /
+encoder / VLM.
+
+Layers are partitioned into **scan groups** so HLO size stays O(#distinct
+layer kinds), not O(num_layers) — required for the 48-layer 400B config on a
+512-device mesh. A *kind* is the static structure of one block
+(attention type, MoE?, global-vs-sliding attention); the planner finds a
+periodic pattern (llama4's dense/MoE alternation scans as 24 two-block
+super-layers) or falls back to contiguous uniform segments (hymba's three
+full-attention layers split the SWA stack). Params and caches for a group are
+stacked along a leading ``layers`` axis and driven by ``lax.scan``.
+
+Block layouts (pre-norm, residual):
+- dense/MoE:  x += attn(norm(x));  x += mlp|moe(norm(x))
+- ssm:        x += mamba(norm(x))                      (mamba1: no separate MLP)
+- hybrid:     x += fuse(attn(norm(x)), mamba(norm(x))); x += mlp(norm(x))
+  where fuse = mean of per-branch RMS-normed outputs (Hymba's parallel heads).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..parallel.sharding import ParamSpec, constrain
+from ..quant.qlinear import GemmBackend, dense
+from .attention import gqa_attention, gqa_spec, init_kv_cache, mla_attention, mla_spec
+from .layers import embed_lookup, embed_spec, linear_spec, mlp, mlp_spec, rms_norm, rms_norm_spec
+from .moe import moe_ffn, moe_spec
+from .ssm import init_ssm_state, mamba_decode_step, mamba_mixer, mamba_spec
+
+__all__ = [
+    "LayerKind",
+    "layer_kind",
+    "plan_groups",
+    "model_spec",
+    "forward",
+    "lm_logits",
+    "init_caches",
+    "backend_from",
+]
+
+
+# --------------------------------------------------------------- layer plan
+@dataclass(frozen=True)
+class LayerKind:
+    mixer: str          # gqa | mla | ssm | hybrid
+    moe: bool
+    is_global: bool     # full attention (vs sliding window)
+
+
+def layer_kind(cfg: ModelConfig, i: int) -> LayerKind:
+    if cfg.family == "ssm":
+        mixer = "ssm"
+    elif cfg.family == "hybrid":
+        mixer = "hybrid"
+    else:
+        mixer = cfg.attn_type
+    return LayerKind(mixer=mixer, moe=cfg.is_moe_layer(i), is_global=cfg.is_global_attn(i))
+
+
+@dataclass(frozen=True)
+class Group:
+    kinds: tuple[LayerKind, ...]   # super-block structure (usually length 1)
+    repeats: int
+
+
+def plan_groups(cfg: ModelConfig) -> tuple[Group, ...]:
+    kinds = [layer_kind(cfg, i) for i in range(cfg.num_layers)]
+    # periodic pattern (e.g. llama4 dense/MoE alternation)
+    for p in (1, 2, 3, 4):
+        if cfg.num_layers % p == 0 and all(
+            kinds[i] == kinds[i % p] for i in range(cfg.num_layers)
+        ):
+            return (Group(tuple(kinds[:p]), cfg.num_layers // p),)
+    # contiguous uniform segments
+    groups: list[Group] = []
+    i = 0
+    while i < cfg.num_layers:
+        j = i
+        while j < cfg.num_layers and kinds[j] == kinds[i]:
+            j += 1
+        groups.append(Group((kinds[i],), j - i))
+        i = j
+    return tuple(groups)
+
+
+# -------------------------------------------------------------- block specs
+def _mixer_spec(cfg: ModelConfig, kind: LayerKind) -> dict:
+    if kind.mixer == "gqa":
+        return {"attn": gqa_spec(cfg)}
+    if kind.mixer == "mla":
+        return {"attn": mla_spec(cfg)}
+    if kind.mixer == "ssm":
+        return {"ssm": mamba_spec(cfg)}
+    if kind.mixer == "hybrid":
+        return {
+            "attn": gqa_spec(cfg),
+            "ssm": mamba_spec(cfg),
+            "fuse_attn_norm": rms_norm_spec(cfg.d_model),
+            "fuse_ssm_norm": rms_norm_spec(cfg.d_model),
+        }
+    raise ValueError(kind.mixer)
+
+
+def block_spec(cfg: ModelConfig, kind: LayerKind) -> dict:
+    spec = {"norm1": rms_norm_spec(cfg.d_model), **_mixer_spec(cfg, kind)}
+    if kind.mixer != "ssm":
+        spec["norm2"] = rms_norm_spec(cfg.d_model)
+        spec["ffn"] = moe_spec(cfg) if kind.moe else mlp_spec(cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return spec
+
+
+def _stack_spec(spec, repeats: int):
+    """Prepend a ``layers`` axis of size ``repeats`` to every ParamSpec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((repeats,) + s.shape, ("layers",) + s.axes, init=s.init, scale=s.scale),
+        spec,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    spec: dict = {}
+    if cfg.frontend == "audio":
+        spec["frontend_proj"] = linear_spec(512, cfg.d_model, (None, "embed"), bias=True)
+    else:
+        spec["embed"] = embed_spec(cfg.vocab_size, cfg.d_model)
+    spec["groups"] = tuple(
+        _stack_spec({f"k{j}": block_spec(cfg, kind) for j, kind in enumerate(g.kinds)}, g.repeats)
+        for g in plan_groups(cfg)
+    )
+    spec["final_norm"] = rms_norm_spec(cfg.d_model)
+    if not cfg.tie_embeddings:
+        spec["head"] = linear_spec(cfg.d_model, cfg.vocab_size, ("embed", "vocab"))
+    return spec
+
+
+def backend_from(rc: RunConfig) -> GemmBackend:
+    return GemmBackend(rc.gemm_backend, rc.gemm_mode, rc.collect_gemm_stats)
+
+
+# -------------------------------------------------------------------- cache
+def _block_cache(cfg: ModelConfig, kind: LayerKind, batch: int, capacity: int, kv_dtype) -> dict:
+    cache: dict = {}
+    if kind.mixer in ("gqa", "mla", "hybrid"):
+        cache.update(init_kv_cache(cfg, batch, capacity, kv_dtype))
+    if kind.mixer in ("ssm", "hybrid"):
+        cache.update(init_ssm_state(cfg, batch))
+    return cache
+
+
+def init_caches(cfg: ModelConfig, rc: RunConfig, batch: int, capacity: int):
+    kv_dtype = jnp.int8 if rc.kv_cache_dtype == "int8" else jnp.dtype(rc.dtype)
+    out = []
+    for g in plan_groups(cfg):
+        blocks = {
+            f"k{j}": _block_cache(cfg, kind, batch, capacity, kv_dtype)
+            for j, kind in enumerate(g.kinds)
+        }
+        out.append(
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (g.repeats,) + x.shape).copy(), blocks)
+        )
+    return tuple(out)
+
+
+# ------------------------------------------------------------------- blocks
+def _apply_block(
+    cfg: ModelConfig,
+    kind: LayerKind,
+    p: dict,
+    x: jnp.ndarray,
+    positions,
+    *,
+    backend: GemmBackend,
+    cache: dict | None,
+    cache_pos,
+    chunk: int,
+    want_state: bool,
+):
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(p["norm1"], x, cfg.rms_eps)
+    new_cache: dict = {}
+
+    if kind.mixer in ("gqa", "mla", "hybrid"):
+        attn_fn = mla_attention if kind.mixer == "mla" else gqa_attention
+        kv_cache = None
+        if cache is not None and ("k" in cache or "ckv" in cache):
+            kv_cache = {k: v for k, v in cache.items() if k not in ("h", "conv")}
+        y_attn, kv_out = attn_fn(
+            cfg, p["attn"], h, positions,
+            backend=backend, cache=kv_cache, cache_pos=cache_pos,
+            is_global=kind.is_global, chunk=chunk,
+        )
+        if kv_out is not None:
+            new_cache.update(kv_out)
+
+    if kind.mixer == "ssm" or kind.mixer == "hybrid":
+        if cache is not None and "h" in cache:
+            ssm_state = {"h": cache["h"], "conv": cache["conv"]}
+            if x.shape[1] == 1:
+                y_ssm, st = mamba_decode_step(cfg, p["ssm"], h, ssm_state, backend=backend)
+            else:
+                y_ssm, st = mamba_mixer(cfg, p["ssm"], h, backend=backend, return_state=True)
+            new_cache.update(st)
+        else:
+            y_ssm, st = mamba_mixer(
+                cfg, p["ssm"], h, backend=backend, return_state=want_state
+            )
+            if st is not None:
+                new_cache.update(st)
+
+    if kind.mixer == "hybrid":
+        y = 0.5 * (
+            rms_norm(p["fuse_attn_norm"], y_attn, cfg.rms_eps)
+            + rms_norm(p["fuse_ssm_norm"], y_ssm, cfg.rms_eps)
+        )
+    elif kind.mixer == "ssm":
+        y = y_ssm
+    else:
+        y = y_attn
+    # pin the branch output to the residual layout *before* the add: under SP
+    # this turns the o-proj/down-proj psum into a reduce-scatter instead of a
+    # full-sequence all-reduce followed by a slice
+    x = x + constrain(y, "batch", "seq", "act_embed")
+
+    if kind.mixer != "ssm":
+        h2 = rms_norm(p["norm2"], x, cfg.rms_eps)
+        if kind.moe:
+            y2, aux = moe_ffn(cfg, p["ffn"], h2, backend=backend)
+        else:
+            y2 = mlp(p["ffn"], h2, cfg.mlp_type, backend=backend)
+        x = x + constrain(y2, "batch", "seq", "act_embed")
+
+    return x, (new_cache or None), aux
+
+
+# ------------------------------------------------------------------ forward
+def forward(
+    cfg: ModelConfig,
+    rc: RunConfig,
+    params: dict,
+    batch: dict,
+    *,
+    caches=None,
+    cache_pos=None,
+):
+    """Returns (hidden (B,S,D), new_caches, aux_loss).
+
+    batch: {"tokens": (B,S) int32} or {"embeds": (B,S,F)};
+           optional "positions" (B,S) or (3,B,S) for M-RoPE.
+    caches: output of init_caches (stacked per group) or None.
+    cache_pos: scalar int32 write offset (required with caches).
+    """
+    backend = backend_from(rc)
+    dtype = jnp.dtype(rc.dtype)
+    groups = plan_groups(cfg)
+
+    if "tokens" in batch:
+        x = embed_lookup(params["embed"], batch["tokens"], dtype)
+    else:
+        x = dense(params["frontend_proj"], batch["embeds"].astype(dtype), backend=backend,
+                  name="frontend")
+    B, S = x.shape[:2]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        base = jnp.asarray(0 if cache_pos is None else cache_pos, jnp.int32)
+        positions = base + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    want_state = caches is not None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+
+    def superblock(kinds, x, p, cache):
+        # residual stream layout anchor (seq-sharded under SP overrides)
+        x = constrain(x, "batch", "seq", "act_embed")
+        aux = jnp.zeros((), jnp.float32)
+        ncache = {}
+        for j, kind in enumerate(kinds):
+            c_j = cache[f"k{j}"] if cache is not None else None
+            x, nc, a = _apply_block(
+                cfg, kind, p[f"k{j}"], x, positions,
+                backend=backend, cache=c_j, cache_pos=cache_pos,
+                chunk=rc.attn_chunk, want_state=want_state,
+            )
+            if nc is not None:
+                ncache[f"k{j}"] = nc
+            aux = aux + a
+        return x, (ncache or None), aux
+
+    for gi, g in enumerate(groups):
+        gp = params["groups"][gi]
+        gc = caches[gi] if caches is not None else None
+
+        def one_layer(x, p_slice, c_slice, _kinds=g.kinds):
+            fn = lambda x_, p_, c_: superblock(_kinds, x_, p_, c_)
+            if rc.remat in ("block", "full"):
+                fn = jax.checkpoint(
+                    fn,
+                    policy=None if rc.remat == "full" else jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+            return fn(x, p_slice, c_slice)
+
+        if rc.scan_layers and g.repeats > 1:
+            def step(carry, xs, _g=g):
+                x, aux = carry
+                if gc is not None:
+                    p_slice, c_slice = xs
+                else:
+                    p_slice, c_slice = xs, None
+                x, nc, a = one_layer(x, p_slice, c_slice)
+                return (x, aux + a), nc
+
+            xs = (gp, gc) if gc is not None else gp
+            (x, aux_total), nc = jax.lax.scan(step, (x, aux_total), xs)
+            new_caches.append(nc)
+        else:
+            ncs = []
+            for i in range(g.repeats):
+                p_slice = jax.tree.map(lambda a, i=i: a[i], gp)
+                c_slice = jax.tree.map(lambda a, i=i: a[i], gc) if gc is not None else None
+                x, nc, a = one_layer(x, p_slice, c_slice)
+                aux_total = aux_total + a
+                ncs.append(nc)
+            if ncs and ncs[0] is not None:
+                new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+            else:
+                new_caches.append(None)
+
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    x = constrain(x, "batch", "seq", "act_embed")
+    return x, (tuple(new_caches) if caches is not None else None), aux_total
+
+
+def lm_logits(cfg: ModelConfig, rc: RunConfig, params: dict, h: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) -> (B, S, V). Sharded on ("batch", None, "act_vocab")."""
+    backend = backend_from(rc)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h, params["embed"]["embedding"].astype(h.dtype),
+            preferred_element_type=jnp.float32,
+        ).astype(h.dtype)
+    else:
+        logits = dense(params["head"], h, backend=backend, name="lm_head")
+    return constrain(logits, "batch", None, "act_vocab")

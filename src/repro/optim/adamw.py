@@ -1,0 +1,192 @@
+"""AdamW with optional int8 block-quantized moments + cosine schedule.
+
+8-bit moments are what makes llama4-maverick-400b's optimizer state fit
+16 GB/chip HBM (DESIGN.md §5 napkin math): fp32 m+v would be 18.8 GB/chip at
+256-way sharding; int8 m,v (+ per-64-block fp32 scales) + fp32 master is
+~6.3 GB/chip. Only tensors with ndim ≥ 2 are quantized (norm scales / biases
+stay fp32 — negligible and precision-critical), matching bitsandbytes
+practice. Quantization is blockwise along the last axis so optimizer-state
+sharding matches the parameter sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RunConfig
+
+__all__ = ["AdamWState", "init_opt_state", "adamw_update", "lr_schedule", "global_norm", "clip_by_global_norm"]
+
+_BLOCK = 64
+
+
+# ---------------------------------------------------- int8 block quantization
+def _q8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., K) -> (q int8 (..., K), scales f32 (..., nb))."""
+    K = x.shape[-1]
+    nb = -(-K // _BLOCK)
+    pad = nb * _BLOCK - K
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*x.shape[:-1], nb, _BLOCK)
+    s = jnp.abs(xb).max(-1) / 127.0 + 1e-12
+    q = jnp.round(xb / s[..., None]).astype(jnp.int8)
+    return q.reshape(*x.shape[:-1], nb * _BLOCK)[..., :K], s
+
+
+def _dq8(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    K = q.shape[-1]
+    nb = s.shape[-1]
+    pad = nb * _BLOCK - K
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    xb = qp.reshape(*q.shape[:-1], nb, _BLOCK).astype(jnp.float32) * s[..., None]
+    return xb.reshape(*q.shape[:-1], nb * _BLOCK)[..., :K]
+
+
+# Second moments span orders of magnitude within a block; linear int8 zeroes
+# the small ones and 1/sqrt(v) then explodes. Geometric (log-domain) uint8
+# codes cover 8 decades at ~3.7% max relative error: code c>0 -> v = s * r^(255-c).
+import math as _math
+
+# ln(r); r^255 = 1e-8. Plain-python constant: a jnp call at module level
+# would initialize the jax backend on import (breaking tests that must set
+# XLA_FLAGS before first jax use).
+_LOG_LN_R = _math.log(1e-8) / 255.0
+
+
+def _q8_log(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Non-negative x (..., K) -> (codes uint8, scales f32 (..., nb))."""
+    K = x.shape[-1]
+    nb = -(-K // _BLOCK)
+    pad = nb * _BLOCK - K
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*x.shape[:-1], nb, _BLOCK)
+    s = xb.max(-1) + 1e-30
+    ratio = jnp.clip(xb / s[..., None], 1e-12, 1.0)
+    c = 255.0 - jnp.log(ratio) / _LOG_LN_R
+    c = jnp.where(xb <= s[..., None] * 1e-8, 0.0, jnp.clip(jnp.round(c), 1, 255))
+    q = c.astype(jnp.uint8)
+    return q.reshape(*x.shape[:-1], nb * _BLOCK)[..., :K], s
+
+
+def _dq8_log(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    K = q.shape[-1]
+    nb = s.shape[-1]
+    pad = nb * _BLOCK - K
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    qb = qp.reshape(*q.shape[:-1], nb, _BLOCK).astype(jnp.float32)
+    v = jnp.where(qb == 0, 0.0, jnp.exp((255.0 - qb) * _LOG_LN_R)) * s[..., None]
+    return v.reshape(*q.shape[:-1], nb * _BLOCK)[..., :K]
+
+
+def _quantize_moments(leaf: jnp.ndarray) -> bool:
+    return leaf.ndim >= 2
+
+
+# ------------------------------------------------------------------ schedule
+def lr_schedule(rc: RunConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(rc.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - rc.warmup_steps) / jnp.maximum(rc.total_steps - rc.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return rc.lr * warm * cos
+
+
+# ---------------------------------------------------------------- state/init
+@dataclass
+class AdamWState:
+    step: jnp.ndarray
+    master: dict      # fp32 (or bf16) master weights
+    m: dict           # fp32 array, or {"q": int8, "s": f32} when quantized
+    v: dict
+
+
+def _zeros_moment(leaf, quantize: bool, log: bool = False):
+    if quantize and _quantize_moments(leaf):
+        q, s = (_q8_log if log else _q8)(jnp.zeros(leaf.shape, jnp.float32))
+        return {"q": q, "s": s}
+    return jnp.zeros(leaf.shape, jnp.float32)
+
+
+def init_opt_state(params: dict, rc: RunConfig) -> AdamWState:
+    quant = rc.moments_dtype == "int8"
+    master_dt = jnp.dtype(rc.master_dtype)
+    # copy=True: master must not alias params (donation would see the same
+    # buffer twice when param_dtype == master_dtype)
+    master = jax.tree.map(lambda p: jnp.array(p, dtype=master_dt, copy=True), params)
+    m = jax.tree.map(lambda p: _zeros_moment(p, quant), params)
+    v = jax.tree.map(lambda p: _zeros_moment(p, quant, log=True), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=master, m=m, v=v)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.step, s.master, s.m, s.v), None),
+    lambda _, c: AdamWState(*c),
+)
+
+
+# ------------------------------------------------------------------- update
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), gn
+
+
+def _is_moment(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "s"}
+
+
+def adamw_update(
+    grads: dict, state: AdamWState, rc: RunConfig, params_dtype
+) -> tuple[dict, AdamWState, dict]:
+    """One AdamW step. Returns (new_params_cast, new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_schedule(rc, step.astype(jnp.float32))
+    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+    b1, b2, eps, wd = rc.beta1, rc.beta2, rc.eps, rc.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        mf = _dq8(m["q"], m["s"]) if _is_moment(m) else m
+        vf = _dq8_log(v["q"], v["s"]) if _is_moment(v) else v
+        mf = b1 * mf + (1.0 - b1) * g
+        vf = b2 * vf + (1.0 - b2) * g * g
+        mhat = mf / bc1
+        vhat = vf / bc2
+        mw = master.astype(jnp.float32)
+        # no weight decay on 1-D leaves (norms/biases)
+        decay = wd if master.ndim >= 2 else 0.0
+        new = mw - lr * (mhat / (jnp.sqrt(vhat) + eps) + decay * mw)
+        if _is_moment(m):
+            qm, sm = _q8(mf)
+            qv, sv = _q8_log(vf)
+            return new.astype(master.dtype), {"q": qm, "s": sm}, {"q": qv, "s": sv}
+        return new.astype(master.dtype), mf, vf
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, ma, m, v) for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    new_params = jax.tree.map(lambda x: x.astype(params_dtype), new_master)
+    new_state = AdamWState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

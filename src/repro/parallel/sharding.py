@@ -1,0 +1,229 @@
+"""Logical-axis sharding rules (MaxText-style) + mesh context.
+
+Params and activations carry *logical* axis names ("embed", "heads", "mlp",
+"vocab", "experts", "batch", "seq", ...). A rules table maps logical names to
+mesh axes; :func:`spec_for` applies the table with a divisibility guard (a
+logical dim that doesn't divide its mesh axis is silently replicated — e.g.
+qwen3-14b's 40 heads on a 16-way model axis — recorded for the roofline
+report). This gives DP/FSDP/TP/EP/SP from one table:
+
+- DP:   "batch" -> ("pod", "data")
+- FSDP: "embed" -> "data"   (params sharded on the embed dim, XLA all-gathers)
+- TP:   "heads"/"mlp"/"vocab" -> "model"
+- EP:   "experts" -> "model"
+- SP:   "seq" -> "model" for long-context activations (rule override)
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "MeshContext",
+    "use_mesh",
+    "current_ctx",
+    "spec_for",
+    "sharding_for",
+    "constrain",
+    "ParamSpec",
+    "materialize",
+    "shape_structs",
+    "tree_axes",
+    "tree_sharding",
+]
+
+# logical axis -> mesh axis (str), tuple of mesh axes, or None (replicate)
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "group": ("pod", "data", "model"),   # MoE dispatch groups (batch × seq shard)
+    "group_data": ("pod", "data"),       # token dim of EP-resharded buffers
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_inner": "model",
+    "act_experts": "model",
+    "layers": None,
+    "embed": "data",          # FSDP
+    "heads": "model",         # TP
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",       # EP
+    "kv_lora": None,
+    "kv_seq": "model",        # serving KV-cache sequence dim (baseline layout)
+    "cache_heads": None,      # cache kv-head dim (rarely divides `model`; see §Perf)
+    "conv": None,
+    "state": None,
+    "dt": None,
+    "inner": "model",
+    "classes": None,
+    None: None,
+}
+
+_local = threading.local()
+
+
+@dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+    dropped: list = field(default_factory=list)  # (axes, dim, axis) divisibility drops
+
+    def axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in axis]))
+        return int(self.mesh.shape[axis])
+
+
+def current_ctx() -> MeshContext | None:
+    return getattr(_local, "ctx", None)
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None, overrides: dict | None = None):
+    """Activate a mesh + rules table for model tracing under this context."""
+    r = dict(DEFAULT_RULES)
+    if rules:
+        r.update(rules)
+    if overrides:
+        r.update(overrides)
+    # drop rules that reference axes absent from this mesh (e.g. "pod")
+    def _filter(ax):
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a in mesh.shape)
+            return kept or None
+        return ax if ax in mesh.shape else None
+
+    r = {k: _filter(v) for k, v in r.items()}
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = MeshContext(mesh=mesh, rules=r)
+    try:
+        with mesh:
+            yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+def spec_for(axes: tuple, shape: tuple | None = None) -> P:
+    """PartitionSpec for logical axes, with divisibility guard when the
+    concrete shape is known."""
+    ctx = current_ctx()
+    if ctx is None:
+        return P(*([None] * len(axes)))
+    out = []
+    used: set = set()
+    for i, name in enumerate(axes):
+        mesh_ax = ctx.rules.get(name)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        # a mesh axis may shard at most one dim (first logical axis wins —
+        # e.g. MoE expert weights ("experts","embed","mlp") with both
+        # "experts" and "mlp" mapped to "model" shard only on "experts")
+        flat = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        if shape is not None:
+            size = ctx.axis_size(mesh_ax)
+            if shape[i] % size != 0:
+                ctx.dropped.append((name, shape[i], mesh_ax))
+                out.append(None)
+                continue
+        out.append(mesh_ax)
+        used.update(flat)
+    return P(*out)
+
+
+def sharding_for(axes: tuple, shape: tuple | None = None) -> NamedSharding | None:
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, spec_for(axes, shape))
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without a mesh)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding_for(tuple(axes), x.shape))
+
+
+# ----------------------------------------------------------- ParamSpec trees
+@dataclass(frozen=True)
+class ParamSpec:
+    """Single source of truth for one parameter: shape, logical axes, init."""
+
+    shape: tuple
+    axes: tuple
+    init: str = "normal"     # normal | zeros | ones | scaled_normal
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key, dtype):
+    jnp = jax.numpy
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "hippo":
+        # S4D-real init for mamba A_log: A_log[..., n] = log(n + 1)
+        n = spec.shape[-1]
+        row = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(row, spec.shape).astype(dtype)
+    if spec.init == "dt_bias":
+        # inverse-softplus of dt ~ LogUniform[1e-3, 1e-1] (mamba1 init)
+        u = jax.random.uniform(key, spec.shape, jnp.float32)
+        dt = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    std = spec.scale
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(spec_tree, key, dtype):
+    """Instantiate a ParamSpec tree into a params pytree."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_structs(spec_tree, dtype):
+    """ShapeDtypeStruct tree (for eval_shape / dry-run init)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def tree_axes(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def tree_sharding(spec_tree):
+    """NamedSharding tree for a ParamSpec tree under the active mesh."""
+    return jax.tree.map(
+        lambda s: sharding_for(s.axes, s.shape), spec_tree, is_leaf=_is_spec
+    )

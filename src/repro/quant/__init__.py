@@ -1,0 +1,21 @@
+"""Low-precision substrate: PTQ, GEMM backend registry, workload statistics."""
+
+from .qlinear import BF16, GemmBackend, dense, gemm, prequantize_tree
+from .quantize import QuantConfig, compute_scale, dequantize, fake_quant, quantize
+from .stats import StatsCollector, active_collector, collecting
+
+__all__ = [
+    "BF16",
+    "GemmBackend",
+    "dense",
+    "gemm",
+    "prequantize_tree",
+    "QuantConfig",
+    "compute_scale",
+    "dequantize",
+    "fake_quant",
+    "quantize",
+    "StatsCollector",
+    "active_collector",
+    "collecting",
+]

@@ -1,0 +1,83 @@
+"""Static PTQ calibration: per-GEMM activation scales (absmax observers).
+
+The paper profiles a *statically* quantized INT8 network (fixed scales,
+calibrated once) — with dynamic per-tensor quantization every tensor's max
+|q| is 127 by construction and Fig 5's statistic degenerates. Usage:
+
+    with calibrating() as reg:                    # pass 1: observe absmax
+        model(x_calib)
+    with static_scales(reg):                      # pass 2+: fixed scales
+        with collecting() as col:                 # Fig 5 statistics
+            model(x_eval)
+
+Scales are keyed by the GEMM ``name``; under scan-over-layers all layers of
+one kind share a name and therefore a scale (per-op-type calibration — the
+coarsest static scheme; finer granularity would unroll the scan)."""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+
+__all__ = ["calibrating", "static_scales", "active_observer", "active_scales", "observe"]
+
+class _Global:
+    """jax.debug.callback may run on a runtime dispatch thread, so the
+    active observer/scales must be process-global, not thread-local."""
+
+    observer = None
+    scales = None
+
+
+_local = _Global()
+
+
+class Observer(dict):
+    """name -> running absmax (float)."""
+
+    def update_absmax(self, name: str, amax: float):
+        self[name] = max(self.get(name, 0.0), float(amax))
+
+
+def active_observer() -> Observer | None:
+    return getattr(_local, "observer", None)
+
+
+def active_scales() -> dict | None:
+    return getattr(_local, "scales", None)
+
+
+@contextmanager
+def calibrating():
+    prev = getattr(_local, "observer", None)
+    obs = Observer()
+    _local.observer = obs
+    try:
+        yield obs
+    finally:
+        jax.effects_barrier()  # flush in-flight debug callbacks
+        _local.observer = prev
+
+
+@contextmanager
+def static_scales(reg: dict):
+    prev = getattr(_local, "scales", None)
+    _local.scales = dict(reg)
+    try:
+        yield
+    finally:
+        _local.scales = prev
+
+
+def observe(name: str, x):
+    """Record absmax of ``x`` into the active observer (host callback)."""
+
+    def _host(amax):
+        obs = active_observer()
+        if obs is not None:
+            obs.update_absmax(name, float(np.asarray(amax)))
+
+    jax.debug.callback(_host, jax.numpy.abs(x).max())

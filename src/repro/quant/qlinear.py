@@ -1,0 +1,149 @@
+"""GEMM backend registry — every linear layer in the model zoo routes here.
+
+Backends (DESIGN.md §3):
+
+- ``bf16``              plain mixed-precision dot (fp32 accumulation)
+- ``int8|int4|int2``    the tuGEMM exact low-precision contract:
+    * ``dynamic``  — quantize activations (per-tensor) and weights
+      (per-out-channel) on the fly, exact integer GEMM, dequantize. Works on
+      unmodified float params (training-time eval, calibration, Fig 5
+      profiling).
+    * ``prequant`` — weights quantized + plane-packed offline
+      (``prequantize_tree``); serving path with 2-8× less weight HBM traffic.
+
+With ``collect_stats=True`` each GEMM also emits tuGEMM hardware statistics
+(max |value|, serial/parallel cycles) to the active ``quant.stats`` collector
+— the Fig 5 methodology as a framework feature.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+
+from ..core.encoding import int_range
+from ..kernels import ops
+from .quantize import compute_scale, quantize
+from .stats import record_stats
+
+__all__ = ["GemmBackend", "BF16", "gemm", "dense", "prequantize_tree"]
+
+
+@dataclass(frozen=True)
+class GemmBackend:
+    kind: str = "bf16"            # bf16 | int8 | int4 | int2
+    mode: str = "dynamic"         # dynamic | prequant (ignored for bf16)
+    collect_stats: bool = False   # emit tuGEMM cycle stats per GEMM
+    impl: str = "auto"            # kernel dispatch (kernels/ops.py)
+
+    @property
+    def bits(self) -> int:
+        return {"bf16": 16, "int8": 8, "int4": 4, "int2": 2}[self.kind]
+
+    def with_stats(self, on: bool = True) -> "GemmBackend":
+        return replace(self, collect_stats=on)
+
+
+BF16 = GemmBackend("bf16")
+
+
+def _flatten(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    backend: GemmBackend = BF16,
+    name: str = "gemm",
+) -> jnp.ndarray:
+    """x (..., K) · w (K, N) → (..., N), in x.dtype."""
+    if backend.kind == "bf16":
+        return jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
+
+    bits = backend.bits
+    x2, lead = _flatten(x)
+    from .calibration import active_observer, active_scales, observe
+
+    if active_observer() is not None:
+        observe(name, x2)
+    scales = active_scales()
+    if scales is not None and name in scales:
+        # static PTQ: fixed calibrated scale (per-GEMM-name)
+        sx = jnp.asarray(scales[name] / (int_range(bits)[1]), jnp.float32)
+    else:
+        sx = compute_scale(x2, bits)                   # dynamic per-tensor scale
+    xq = quantize(x2, sx, bits)
+    sw = compute_scale(w, bits, axis=1)                # per-out-channel weight scale
+    wq = quantize(w, sw.reshape(1, -1), bits)
+    y_int = ops.matmul_int8(xq, wq, impl=backend.impl)
+    if backend.collect_stats:
+        stats = ops.unary_step_stats(xq, wq, impl=backend.impl)
+        # Fig 5 statistic = feature-map (activation) max; cycle counts use
+        # both operands (the hardware's column AND row counters).
+        record_stats(
+            name, x2.shape[0], x2.shape[1], w.shape[1],
+            jnp.abs(xq).max(), stats.serial_cycles, stats.parallel_cycles,
+        )
+    y = y_int.astype(jnp.float32) * (sx * sw.reshape(1, -1))
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def _gemm_prequant(x: jnp.ndarray, leaf: dict, backend: GemmBackend, name: str) -> jnp.ndarray:
+    bits = backend.bits
+    x2, lead = _flatten(x)
+    sx = compute_scale(x2, bits)
+    xq = quantize(x2, sx, bits)
+    if bits == 8:
+        y_int = ops.matmul_int8(xq, leaf["qkernel"], impl=backend.impl)
+    else:
+        y_int = ops.matmul_packed(xq, leaf["qkernel"], bits=bits, impl=backend.impl)
+    sw = leaf["qscale"]
+    if backend.collect_stats:
+        # stats need the logical (unpacked) weights' maxes — precomputed offline
+        record_stats(name, x2.shape[0], x2.shape[1], sw.shape[0],
+                     jnp.abs(xq).max(), jnp.zeros(()), jnp.zeros(()))
+    y = y_int.astype(jnp.float32) * (sx * sw.reshape(1, -1))
+    return y.reshape(*lead, sw.shape[0]).astype(x.dtype)
+
+
+def dense(
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    backend: GemmBackend = BF16,
+    name: str = "dense",
+) -> jnp.ndarray:
+    """Linear layer over a param leaf dict: {'kernel': (K, N) [, 'bias': (N,)]}
+    or its prequantized form {'qkernel', 'qscale'} (see prequantize_tree)."""
+    if "qkernel" in params:
+        y = _gemm_prequant(x, params, backend, name)
+    else:
+        y = gemm(x, params["kernel"], backend=backend, name=name)
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def prequantize_tree(params, bits: int):
+    """Offline PTQ: replace every {'kernel': (K, N)} linear leaf-dict with
+    {'qkernel': packed int8, 'qscale': (N,) f32}. Biases/norms/embeddings are
+    left in float (the paper's hardware boundary — GEMMs only)."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "kernel" in node and getattr(node["kernel"], "ndim", 0) == 2:
+                w = node["kernel"]
+                sw = compute_scale(w, bits, axis=1)
+                wq = quantize(w, sw.reshape(1, -1), bits)
+                new = {"qkernel": ops.pack_weights(wq, bits), "qscale": sw}
+                if "bias" in node:
+                    new["bias"] = node["bias"]
+                return new
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)

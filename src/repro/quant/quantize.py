@@ -1,0 +1,74 @@
+"""Post-training quantization: symmetric scales, calibration, pytree PTQ.
+
+The paper's target regime is 2/4/8-bit weights+activations for edge
+inference. We implement symmetric (zero-point-free — the only affine form a
+sign-magnitude unary datapath supports natively) quantization with
+per-tensor or per-channel scales, absmax or percentile calibration.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from ..core.encoding import int_range
+
+__all__ = ["QuantConfig", "compute_scale", "quantize", "dequantize", "fake_quant"]
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    per_channel: bool = True        # scale per output channel (weights) / feature
+    percentile: float = 100.0       # 100 = absmax calibration
+    mode: str = "dynamic"           # dynamic | prequant (weights packed offline)
+
+    def __post_init__(self):
+        if self.bits not in (2, 4, 8):
+            raise ValueError(f"bits must be one of 2/4/8, got {self.bits}")
+
+
+def compute_scale(
+    x: jnp.ndarray, bits: int, *, axis: int | None = None, percentile: float = 100.0
+) -> jnp.ndarray:
+    """Symmetric scale s.t. quantized values span [-(2^(b-1)-1), 2^(b-1)-1].
+
+    axis=None → per-tensor scalar scale; axis=k → per-slice scale along k
+    (shape keeps dim k, size 1 elsewhere reduced).
+    """
+    _, hi = int_range(bits)
+    absx = jnp.abs(x.astype(jnp.float32))
+    if percentile >= 100.0:
+        amax = absx.max() if axis is None else absx.max(
+            axis=tuple(i for i in range(x.ndim) if i != axis), keepdims=False
+        )
+    else:
+        q = percentile / 100.0
+        if axis is None:
+            amax = jnp.quantile(absx, q)
+        else:
+            moved = jnp.moveaxis(absx, axis, 0).reshape(x.shape[axis], -1)
+            amax = jnp.quantile(moved, q, axis=1)
+    return jnp.maximum(amax, 1e-8) / hi
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Round-to-nearest-even, clip to the w-bit two's-complement range."""
+    lo, hi = int_range(bits)
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, lo, hi).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jnp.ndarray, bits: int, *, axis: int | None = None) -> jnp.ndarray:
+    """Quantize-dequantize (straight-through value); for QAT-style ablations."""
+    s = compute_scale(x, bits, axis=axis)
+    if axis is not None:
+        shape = [1] * x.ndim
+        shape[axis] = x.shape[axis]
+        s = s.reshape(shape)
+    return dequantize(quantize(x, s, bits), s).astype(x.dtype)

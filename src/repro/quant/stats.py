@@ -1,0 +1,90 @@
+"""Workload statistics collection for tuGEMM (the Fig 5 methodology).
+
+A thread-local :class:`StatsCollector` receives, for every GEMM executed with
+``collect_stats`` enabled, the data-dependent tuGEMM quantities: max |value|
+(the Fig 5 statistic), serial/parallel cycle counts, and the GEMM shape.
+Values escape the jit trace via ``jax.debug.callback`` — model code needs no
+signature changes, and collection is zero-cost when disabled (the callback is
+never traced in).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..core.latency import MaxValueProfile
+
+__all__ = ["GemmRecord", "StatsCollector", "collecting", "active_collector", "record_stats"]
+
+
+class _Global:
+    """jax.debug.callback may run on a runtime dispatch thread, so the
+    active collector must be process-global, not thread-local."""
+
+    collector = None
+    lock = threading.Lock()
+
+
+_local = _Global()
+
+
+@dataclass
+class GemmRecord:
+    name: str
+    M: int
+    N: int
+    P: int
+    max_abs: int
+    serial_cycles: int
+    parallel_cycles: int
+
+
+@dataclass
+class StatsCollector:
+    bitwidth: int = 8
+    records: list[GemmRecord] = field(default_factory=list)
+
+    def profile(self) -> MaxValueProfile:
+        prof = MaxValueProfile.empty(self.bitwidth)
+        if self.records:
+            prof.add(np.array([r.max_abs for r in self.records]))
+        return prof
+
+    def total_cycles(self, variant: str) -> int:
+        key = f"{variant}_cycles"
+        return int(sum(getattr(r, key) for r in self.records))
+
+
+def active_collector() -> StatsCollector | None:
+    return getattr(_local, "collector", None)
+
+
+@contextmanager
+def collecting(bitwidth: int = 8):
+    """Context manager enabling GEMM stats collection on this thread."""
+    prev = getattr(_local, "collector", None)
+    col = StatsCollector(bitwidth=bitwidth)
+    _local.collector = col
+    try:
+        yield col
+    finally:
+        jax.effects_barrier()  # flush in-flight debug callbacks
+        _local.collector = prev
+
+
+def record_stats(name: str, M: int, N: int, P: int, max_abs, serial_cycles, parallel_cycles):
+    """Called from inside jit via jax.debug.callback (see qlinear.gemm)."""
+
+    def _host(ma, sc, pc):
+        col = active_collector()
+        if col is not None:
+            col.records.append(
+                GemmRecord(name, M, N, P, int(ma), int(sc), int(pc))
+            )
+
+    jax.debug.callback(_host, max_abs, serial_cycles, parallel_cycles)

@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import HW, CollectiveStats, RooflineReport, analyze, collective_stats
+
+__all__ = ["HW", "CollectiveStats", "RooflineReport", "analyze", "collective_stats"]

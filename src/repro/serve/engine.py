@@ -1,0 +1,164 @@
+"""Batched serving engine: slot-based KV/SSM cache, prefill + decode steps,
+continuous batching.
+
+The two jitted step functions are also what the multi-pod dry-run lowers for
+the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells:
+
+- ``build_prefill(cfg, rc)``: (params, caches, batch) -> (caches, last_logits)
+- ``build_decode(cfg, rc)``:  (params, caches, tokens, pos) -> (caches, logits)
+
+The engine layers continuous batching on top: a fixed pool of ``max_batch``
+slots, each slot holding one request's cache rows; finished slots are
+refilled from the admission queue by writing the new request's prefilled
+cache rows into the pool (a batch-axis dynamic_update_slice — no pool-wide
+recompute). KV caches optionally store int8 (``rc.kv_cache_dtype``)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models import forward, init_caches, lm_logits
+
+__all__ = ["build_prefill", "build_decode", "sample", "Engine", "Request"]
+
+
+def build_prefill(cfg: ModelConfig, rc: RunConfig):
+    def prefill(params, caches, batch):
+        h, caches, _ = forward(cfg, rc, params, batch, caches=caches, cache_pos=0)
+        logits = lm_logits(cfg, rc, params, h[:, -1:, :])
+        return caches, logits[:, 0, :]
+
+    return prefill
+
+
+def build_decode(cfg: ModelConfig, rc: RunConfig):
+    def decode(params, caches, tokens, pos):
+        batch = {"tokens": tokens}
+        if cfg.mrope_sections is not None:
+            B = tokens.shape[0]
+            p = jnp.broadcast_to(pos.astype(jnp.int32), (B,))[:, None]
+            batch["positions"] = jnp.stack([p, p, p])
+        h, caches, _ = forward(cfg, rc, params, batch, caches=caches, cache_pos=pos)
+        logits = lm_logits(cfg, rc, params, h)
+        return caches, logits[:, 0, :]
+
+    return decode
+
+
+def sample(key, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Synchronous continuous-batching engine over a fixed slot pool.
+
+    All slots share a decode position counter (the pool advances in lock
+    step); per-slot start offsets track where each request began so its
+    tokens are written at the right cache positions. Slots admit new
+    requests as soon as they free up.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        rc: RunConfig,
+        params: dict,
+        *,
+        capacity: int,
+        max_batch: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg, self.rc, self.params = cfg, rc, params
+        self.capacity, self.max_batch = capacity, max_batch
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self._prefill = jax.jit(build_prefill(cfg, rc))
+        self._decode = jax.jit(build_decode(cfg, rc), donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_rows, donate_argnums=(0,))
+
+        self.caches = init_caches(cfg, rc, max_batch, capacity)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.pos = 0          # shared decode position
+        self.queue: list[Request] = []
+        self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+
+    # ---------------------------------------------------------------- slots
+    @staticmethod
+    def _insert_rows(pool, rows, idx):
+        """Write one request's cache rows into slot ``idx`` (batch axis=1:
+        leaves are stacked (layers, batch, ...))."""
+        def upd(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), idx, axis=1
+            )
+
+        return jax.tree.map(upd, pool, rows)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if (slot is None or slot.done) and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                batch = {"tokens": toks}
+                if self.cfg.mrope_sections is not None:
+                    p = jnp.arange(toks.shape[1], dtype=jnp.int32)[None]
+                    batch["positions"] = jnp.stack([p, p, p])
+                fresh = init_caches(self.cfg, self.rc, 1, self.capacity)
+                fresh, logits = self._prefill(self.params, fresh, batch)
+                self.key, k = jax.random.split(self.key)
+                tok = sample(k, logits, self.temperature)
+                req.out.append(int(tok[0]))
+                self.caches = self._insert(self.caches, fresh, i)
+                self.slots[i] = req
+                self.last_tokens = self.last_tokens.at[i, 0].set(tok[0])
+                # request decode continues from its prompt length
+                self.pos = max(self.pos, toks.shape[1])
+
+    # ----------------------------------------------------------------- run
+    def step(self):
+        """One synchronous decode step for every active slot."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None and not s.done]
+        if not active:
+            return False
+        self.caches, logits = self._decode(
+            self.params, self.caches, self.last_tokens, jnp.asarray(self.pos, jnp.int32)
+        )
+        self.pos += 1
+        self.key, k = jax.random.split(self.key)
+        toks = sample(k, logits, self.temperature)
+        self.last_tokens = toks[:, None]
+        for i in active:
+            req = self.slots[i]
+            req.out.append(int(toks[i]))
+            if len(req.out) >= req.max_new or self.pos >= self.capacity - 1:
+                req.done = True
+        return True
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(s and not s.done for s in self.slots)) and steps < max_steps:
+            if not self.step() and not self.queue:
+                break
+            steps += 1
+        return [s for s in self.slots if s is not None]

@@ -1,0 +1,144 @@
+"""Mesh-agnostic checkpointing: per-leaf ``.npy`` + JSON manifest.
+
+Leaves are addressed by their pytree key path, and the manifest records only
+*logical* metadata (path, shape, dtype, step) — nothing about the mesh — so a
+checkpoint written on a ``(16,16)`` mesh restores onto ``(2,16,16)`` or onto
+a single CPU (elastic scaling / reshard-on-load: pass ``sharding`` at restore
+and each leaf is ``device_put`` straight to its new placement).
+
+Saves are atomic (write to ``.tmp-<step>`` then rename) and optionally async
+(a daemon thread does device_get + file IO while training continues — the
+step's arrays are snapshotted by reference before the thread starts, which is
+safe because jax arrays are immutable).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def _leaf_file(name: str) -> str:
+    return _SAFE.sub("_", name) + ".npy"
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None) -> str:
+    """Write checkpoint for ``step``; returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for name, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = _leaf_file(name)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][name] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, *, sharding=None):
+    """Restore into the structure of ``like`` (params/state template).
+
+    ``sharding``: optional pytree (matching ``like``) of NamedSharding — each
+    leaf is device_put to its target placement (reshard-on-load).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    names = [n for n, _ in _flatten_with_paths(like)]
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_shard = (
+        treedef.flatten_up_to(sharding) if sharding is not None else [None] * len(flat_like)
+    )
+    out = []
+    for name, tmpl, shd in zip(names, flat_like, flat_shard):
+        meta = manifest["leaves"][name]
+        arr = np.load(os.path.join(d, meta["file"]))
+        want = tuple(getattr(tmpl, "shape", arr.shape))
+        assert tuple(arr.shape) == want, (name, arr.shape, want)
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=getattr(tmpl, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a background thread (at most one in flight;
+    a second save request waits for the previous to finish)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, *, extra: dict | None = None):
+        self.wait()
+        # snapshot to host *now*: the training loop donates state buffers, so
+        # by the time the IO thread runs the device arrays may be deleted.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save(self.dir, step, host_tree, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.dir)
+            if (m := re.fullmatch(r"step_(\d+)", d))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)

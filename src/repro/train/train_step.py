@@ -1,0 +1,90 @@
+"""train_step builder: loss → grads → (compression) → AdamW, with optional
+microbatched gradient accumulation.
+
+Microbatching reshapes the per-step batch into ``(k, B/k, ...)`` and scans,
+accumulating fp32 gradients — the activation working set shrinks k×, and on
+real hardware XLA's latency-hiding scheduler overlaps microbatch k+1's
+compute with the reduce-scatter of microbatch k's gradients (the overlap
+trick from DESIGN.md §3; flags set in launch/train.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models import loss_fn
+from ..optim import adamw_update, ef_compress
+
+__all__ = ["TrainState", "build_train_step", "init_train_state"]
+
+
+def init_train_state(cfg: ModelConfig, rc: RunConfig, params: dict) -> dict:
+    from ..optim import init_ef_state, init_opt_state
+
+    state = {"params": params, "opt": init_opt_state(params, rc)}
+    if rc.grad_compression == "int8_ef":
+        state["ef"] = init_ef_state(params)
+    return state
+
+
+# kept as a type alias for readability; the state itself is a plain dict so
+# checkpointing / sharding stay pytree-generic.
+TrainState = dict
+
+
+def build_train_step(cfg: ModelConfig, rc: RunConfig):
+    """Returns ``train_step(state, batch) -> (state, metrics)``."""
+
+    def grads_of(params, batch):
+        def loss_only(p):
+            return loss_fn(cfg, rc, p, batch)
+
+        (_, metrics), grads = jax.value_and_grad(loss_only, has_aux=True)(params)
+        return grads, metrics
+
+    def accumulate(params, batch):
+        k = rc.microbatches
+        if k <= 1:
+            grads, metrics = grads_of(params, batch)
+            return jax.tree.map(lambda g: g.astype(jnp.float32), grads), metrics
+
+        def split(x):
+            # leading batch axis except M-RoPE positions (3, B, S)
+            if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % k == 0:
+                return jnp.moveaxis(
+                    x.reshape(3, k, x.shape[1] // k, *x.shape[2:]), 1, 0
+                )
+            return x.reshape(k, x.shape[0] // k, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(carry, mb_i):
+            acc, _ = carry
+            g, metrics = grads_of(params, mb_i)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return (acc, metrics), None
+
+        (acc, metrics), _ = jax.lax.scan(
+            body, (zero_g, {"loss": jnp.zeros(()), "aux": jnp.zeros(())}), mb
+        )
+        return jax.tree.map(lambda g: g / k, acc), metrics
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        grads, metrics = accumulate(params, batch)
+        if rc.grad_compression == "int8_ef":
+            grads, new_ef = ef_compress(grads, state["ef"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], rc, jnp.dtype(rc.param_dtype)
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if rc.grad_compression == "int8_ef":
+            new_state["ef"] = new_ef
+        return new_state, {**metrics, **opt_metrics}
+
+    return train_step

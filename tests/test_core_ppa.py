@@ -1,0 +1,88 @@
+"""PPA model: calibration quality against Table I + the paper's quoted ratios."""
+
+import numpy as np
+import pytest
+
+from repro.core import TABLE1, UGEMM_BASELINE, evaluate_ppa, ppa_model
+from repro.core.latency import MaxValueProfile, worst_case_cycles
+from repro.core.tiling import GemmTask, TileConfig, plan_workload
+
+
+def test_fit_error_within_10pct_on_all_table1_points():
+    for (variant, S, w), (area, power) in TABLE1.items():
+        m = ppa_model(variant)
+        a = m.area_mm2(w, S, S, S)
+        p = m.power_w(w, S, S, S)
+        assert abs(a - area) / area < 0.10, (variant, S, w, a, area)
+        assert abs(p - power) / power < 0.10, (variant, S, w, p, power)
+
+
+def test_paper_quoted_ratios_vs_ugemm():
+    # §III-A: serial is 14.8x/11.1x and parallel 3.7x/3.8x better than uGEMM
+    # (8-bit 16x16). Computed from Table I data directly.
+    ua, up = UGEMM_BASELINE["area_mm2"], UGEMM_BASELINE["power_w"]
+    sa, sp = TABLE1[("serial", 16, 8)]
+    pa, pp = TABLE1[("parallel", 16, 8)]
+    assert ua / sa == pytest.approx(14.8, abs=0.1)
+    assert up / sp == pytest.approx(11.1, abs=0.1)
+    assert ua / pa == pytest.approx(3.7, abs=0.05)
+    assert up / pp == pytest.approx(3.8, abs=0.05)
+
+
+def test_paper_quoted_serial_vs_parallel_mean_ratios():
+    # §III-A: serial incurs 5.2x / 3.7x less area / power than parallel
+    # (arithmetic mean over bitwidths at 16x16).
+    area_ratios = [TABLE1[("parallel", 16, w)][0] / TABLE1[("serial", 16, w)][0] for w in (2, 4, 8)]
+    pow_ratios = [TABLE1[("parallel", 16, w)][1] / TABLE1[("serial", 16, w)][1] for w in (2, 4, 8)]
+    assert np.mean(area_ratios) == pytest.approx(5.2, abs=0.2)
+    assert np.mean(pow_ratios) == pytest.approx(3.7, abs=0.2)
+
+
+def test_bitwidth_scaling_trend():
+    # §III-A: per 2x bitwidth reduction: serial ~2.1x area / ~2x power,
+    # parallel ~1.6x area / ~1.7x power (averages). Check the model trends.
+    for variant, (ea, ep) in [("serial", (2.1, 2.0)), ("parallel", (1.6, 1.7))]:
+        m = ppa_model(variant)
+        ra = [m.area_mm2(2 * w, 16, 16, 16) / m.area_mm2(w, 16, 16, 16) for w in (2, 4)]
+        rp = [m.power_w(2 * w, 16, 16, 16) / m.power_w(w, 16, 16, 16) for w in (2, 4)]
+        assert np.mean(ra) == pytest.approx(ea, rel=0.15)
+        assert np.mean(rp) == pytest.approx(ep, rel=0.15)
+
+
+def test_matrix_size_scaling_is_quadratic():
+    m = ppa_model("serial")
+    r = m.area_mm2(8, 32, 32, 32) / m.area_mm2(8, 16, 16, 16)
+    assert r == pytest.approx(4.0, rel=0.15)  # paper: "increase by 4x as expected"
+
+
+def test_clock_model():
+    s = ppa_model("serial")
+    assert s.clock_hz(8) == pytest.approx(400e6)
+    assert s.clock_hz(4) == pytest.approx(400e6 * 1.2)
+    assert s.clock_hz(2) == pytest.approx(400e6 * 1.44)
+    p = ppa_model("parallel")
+    assert p.clock_hz(2) == pytest.approx(400e6 * 1.21)
+
+
+def test_evaluate_and_plan():
+    rep = evaluate_ppa("serial", 8, 16, 16, 16, cycles=worst_case_cycles(8, 16, "serial"))
+    assert rep.latency_s > 0 and rep.energy_j > 0
+    # planner: one 256x256x256 GEMM on a 16x16 serial unit = 16^3 passes
+    plan = plan_workload([GemmTask("l0", 256, 256, 256)], TileConfig("serial", 16, 8, units=1))
+    assert plan.total_passes == 16**3
+    plan4 = plan_workload([GemmTask("l0", 256, 256, 256)], TileConfig("serial", 16, 8, units=4))
+    assert plan4.latency_s < plan.latency_s / 3.9
+    assert plan4.area_mm2 == pytest.approx(plan.area_mm2 * 4)
+
+    # profiled average-case beats worst-case latency
+    prof = MaxValueProfile.empty(8)
+    prof.add(np.full(100, 41))  # paper's ResNet18 expected max
+    plan_avg = plan_workload([GemmTask("l0", 256, 256, 256)], TileConfig("serial", 16, 8), profile=prof)
+    assert plan_avg.latency_s < plan.latency_s / 8  # ~(128/41)^2 ≈ 9.7x
+
+
+def test_parallel_vs_serial_latency_tradeoff():
+    # §IV: parallel reduces serial latency by 16x (N) while costing ~5x/4x area/power
+    wc_s = worst_case_cycles(8, 16, "serial")
+    wc_p = worst_case_cycles(8, 16, "parallel")
+    assert wc_s == 16 * wc_p

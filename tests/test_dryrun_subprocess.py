@@ -1,0 +1,44 @@
+"""Full-suite coverage for device-count-dependent tests.
+
+The multi-device tests (tests/test_sharding.py) and the production dry-run
+need ``--xla_force_host_platform_device_count`` set *before* jax initializes,
+which must not happen globally (smoke tests/benches should see 1 device).
+Running them in subprocesses gives the monolithic ``pytest tests/`` run full
+coverage anyway."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env(n_dev: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return env
+
+
+@pytest.mark.slow
+def test_sharding_suite_on_8_devices():
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", os.path.join(ROOT, "tests/test_sharding.py"), "-q"],
+        env=_env(8), capture_output=True, text=True, timeout=900, cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
+    assert "skipped" not in r.stdout.split("\n")[-2], r.stdout[-300:]
+
+
+@pytest.mark.slow
+def test_production_dryrun_one_cell():
+    """The real 256-chip production mesh: one full cell lower+compile."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-0.6b",
+         "--shape", "decode_32k", "--out", "/tmp/dryrun_test"],
+        env=_env(512), capture_output=True, text=True, timeout=900, cwd=ROOT,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
+    assert "[ok]" in r.stdout

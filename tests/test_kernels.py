@@ -1,0 +1,157 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Integer kernels must be *bit-exact* (that is the paper's claim); quantize is
+exact too (same rounding mode). Sweeps cover shapes (aligned, ragged, small),
+bitwidths, and signs.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import int_range
+from repro.core.tugemm import step_cycles
+from repro.kernels import ops, ref
+from repro.kernels.packing import pack_planes, unpack_plane
+
+RNG = np.random.default_rng(0)
+
+
+def rand_int(shape, w, rng=RNG):
+    lo, hi = int_range(w)
+    return jnp.asarray(rng.integers(lo, hi + 1, size=shape), dtype=jnp.int8)
+
+
+# ------------------------------------------------------------- int8 GEMM
+@pytest.mark.parametrize(
+    "M,K,N",
+    [(8, 8, 8), (16, 32, 16), (128, 128, 128), (56, 72, 40), (1, 16, 8), (130, 260, 516)],
+)
+def test_matmul_int8_pallas_vs_ref(M, K, N):
+    a, b = rand_int((M, K), 8), rand_int((K, N), 8)
+    y = ops.matmul_int8(a, b, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.matmul_int_ref(a, b)))
+
+
+def test_matmul_int8_with_c_init():
+    a, b = rand_int((32, 48), 8), rand_int((48, 24), 8)
+    c = rand_int((32, 24), 8).astype(jnp.int32) * 100
+    y = ops.matmul_int8(a, b, c, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.matmul_int_ref(a, b, c)))
+
+
+def test_matmul_int8_extreme_values_no_overflow():
+    # full-scale -128s: accumulation must be int32-wide (128*128*K)
+    a = jnp.full((16, 64), -128, dtype=jnp.int8)
+    b = jnp.full((64, 16), -128, dtype=jnp.int8)
+    y = ops.matmul_int8(a, b, impl="pallas_interpret")
+    assert int(y[0, 0]) == 128 * 128 * 64
+
+
+def test_matmul_int8_xla_path_matches():
+    a, b = rand_int((40, 56), 8), rand_int((56, 24), 8)
+    np.testing.assert_array_equal(
+        np.asarray(ops.matmul_int8(a, b, impl="xla")),
+        np.asarray(ops.matmul_int8(a, b, impl="pallas_interpret")),
+    )
+
+
+# ------------------------------------------------------------- packing
+@pytest.mark.parametrize("bits", [4, 2])
+def test_pack_unpack_roundtrip(bits):
+    planes = {4: 2, 2: 4}[bits]
+    K, N = 8 * planes, 16
+    w = rand_int((K, N), bits)
+    packed = pack_planes(w, bits)
+    assert packed.shape == (K // planes, N)
+    rec = jnp.concatenate([unpack_plane(packed, bits, p) for p in range(planes)], axis=0)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(w))
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+@pytest.mark.parametrize("M,K,N", [(16, 32, 16), (8, 64, 24), (33, 48, 20), (128, 256, 128)])
+def test_matmul_packed_pallas_vs_ref(bits, M, K, N):
+    a = rand_int((M, K), 8)
+    w = rand_int((K, N), bits)
+    packed = ops.pack_weights(w, bits)
+    y = ops.matmul_packed(a, packed, bits=bits, impl="pallas_interpret")
+    expect = ref.matmul_int_ref(a, w)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(expect))
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_matmul_packed_ragged_k(bits):
+    # K not a multiple of the plane count: pack_weights pads
+    M, K, N = 8, 30, 16
+    a = rand_int((M, K), 8)
+    w = rand_int((K, N), bits)
+    packed = ops.pack_weights(w, bits)
+    y = ops.matmul_packed(a, packed, bits=bits, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.matmul_int_ref(a, w)))
+
+
+# ------------------------------------------------------------- temporal
+@pytest.mark.parametrize("w", [2, 4])
+@pytest.mark.parametrize("M,K,N", [(8, 16, 8), (24, 40, 16), (128, 128, 128)])
+def test_temporal_unary_gemm_exact(w, M, K, N):
+    a, b = rand_int((M, K), w), rand_int((K, N), w)
+    y = ops.temporal_gemm(a, b, bitwidth=w, impl="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.temporal_unary_gemm_ref(a, b, w))
+    )
+
+
+def test_temporal_unary_gemm_8bit_small():
+    # 128 unary steps — the full 8-bit decomposition, small shape
+    a, b = rand_int((8, 8), 8), rand_int((8, 8), 8)
+    y = ops.temporal_gemm(a, b, bitwidth=8, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.matmul_int_ref(a, b)))
+
+
+# ------------------------------------------------------------- stats
+@pytest.mark.parametrize("M,K,N", [(16, 16, 16), (40, 72, 24), (128, 256, 128)])
+def test_unary_stats_kernel_vs_core_model(M, K, N):
+    a, b = rand_int((M, K), 8), rand_int((K, N), 8)
+    st_ = ops.unary_step_stats(a, b, impl="pallas_interpret")
+    expect = step_cycles(a, b)
+    np.testing.assert_array_equal(np.asarray(st_.step_cycles), np.asarray(expect))
+    assert int(st_.serial_cycles) == int(expect.sum())
+    assert int(st_.parallel_cycles) == int(expect.max())
+
+
+# ------------------------------------------------------------- quantize
+@pytest.mark.parametrize("w", [2, 4, 8])
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_quantize_sym_kernel(w, per_channel):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 2.0, size=(48, 72)), dtype=jnp.float32)
+    if per_channel:
+        scale = jnp.asarray(np.abs(rng.normal(1, 0.3, size=(72,))) + 0.1, jnp.float32)
+    else:
+        scale = 0.5
+    q = ops.quantize_sym(x, scale, bitwidth=w, impl="pallas_interpret")
+    inv = 1.0 / jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, 72))
+    expect = ref.quantize_sym_ref(x, inv, w)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(expect))
+    lo, hi = int_range(w)
+    assert int(q.min()) >= lo and int(q.max()) <= hi
+
+
+# ------------------------------------------------------------- property
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 40),
+    st.integers(1, 48),
+    st.integers(1, 40),
+    st.sampled_from([2, 4, 8]),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_pallas_int8_exact(M, K, N, w, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand_int((M, K), w, rng), rand_int((K, N), w, rng)
+    y = ops.matmul_int8(a, b, impl="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(y),
+        np.asarray(a, dtype=np.int64) @ np.asarray(b, dtype=np.int64),
+    )

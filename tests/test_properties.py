@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for system invariants added with the
+§Perf changes: MoE dispatch conservation, optimizer state quantization,
+flash decode-direct equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.moe import _dispatch_group
+from repro.optim.adamw import _dq8, _dq8_log, _q8, _q8_log
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    gs=st.integers(4, 32),
+    E=st.integers(2, 8),
+    k=st.integers(1, 3),
+    cap=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_dispatch_invariants(gs, E, k, cap, seed):
+    """Every expert slot holds at most one token; every non-dropped token's
+    row appears at its dest slot; capacity is never exceeded."""
+    key = jax.random.PRNGKey(seed)
+    kx, ki = jax.random.split(key)
+    xg = jax.random.normal(kx, (gs, 8))
+    idx = jax.random.randint(ki, (gs, k), 0, E)
+    xin, dest = _dispatch_group(xg, idx, E, cap)
+    xin, dest = np.asarray(xin), np.asarray(dest)
+
+    x_rep = np.repeat(np.asarray(xg), k, axis=0)
+    flat_e = np.asarray(idx).reshape(-1)
+
+    kept = dest < E * cap
+    # destinations are unique among kept slots
+    assert len(set(dest[kept])) == kept.sum()
+    # each kept token's row landed at its slot; expert range respected
+    for t in np.nonzero(kept)[0]:
+        d = dest[t]
+        assert d // cap == flat_e[t]
+        np.testing.assert_array_equal(xin[d], x_rep[t])
+    # per-expert kept count ≤ cap, and tokens drop only when full
+    for e in range(E):
+        sel = flat_e == e
+        n_e = sel.sum()
+        n_kept = (kept & sel).sum()
+        assert n_kept == min(n_e, cap)
+    # empty slots are exactly zero
+    empty = np.ones(E * cap, bool)
+    empty[dest[kept]] = False
+    assert not np.abs(xin[empty]).any()
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    shape=st.sampled_from([(7,), (3, 65), (2, 64), (5, 130)]),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_q8_linear_roundtrip_error_bound(shape, scale, seed):
+    """Linear int8 block quantization: |x - dq(q(x))| ≤ blockmax/254 + eps."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), shape)) * scale
+    q, s = _q8(jnp.asarray(x))
+    back = np.asarray(_dq8(q, s))
+    assert back.shape == x.shape
+    # per-block bound: half a quantization step
+    err = np.abs(back - x)
+    bound = np.abs(x).max() / 254.0 + 1e-6 * scale + 1e-12
+    assert err.max() <= bound * 1.01, (err.max(), bound)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    shape=st.sampled_from([(9,), (3, 65), (4, 64)]),
+    logmag=st.floats(-6.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_q8_log_roundtrip_relative_error(shape, logmag, seed):
+    """Geometric uint8 codes: ≤ ~3.7 % relative error for values within 8
+    decades of the block max; exact zero maps to zero."""
+    mag = 10.0**logmag
+    x = np.abs(np.asarray(jax.random.normal(jax.random.PRNGKey(seed), shape))) * mag
+    x.flat[0] = 0.0
+    q, s = _q8_log(jnp.asarray(x))
+    back = np.asarray(_dq8_log(q, s))
+    assert back.flat[0] == 0.0
+    nz = x > x.max() * 1e-7
+    rel = np.abs(back[nz] - x[nz]) / x[nz]
+    assert rel.max() < 0.04, rel.max()
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    B=st.integers(1, 3),
+    H=st.sampled_from([2, 4]),
+    KV=st.sampled_from([1, 2]),
+    Skv=st.integers(8, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_direct_matches_scan_path(B, H, KV, Skv, seed):
+    """The Sq=1 direct decode path equals the chunk-scan path for any cache
+    length/valid length."""
+    from repro.models.flash import _decode_direct, _fwd_scan
+
+    if H % KV:
+        H = KV * max(1, H // KV)
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kn = jax.random.split(key, 4)
+    hd = 8
+    q = jax.random.normal(kq, (B, 1, H, hd))
+    k = jax.random.normal(kk, (B, Skv, KV, hd))
+    v = jax.random.normal(kv, (B, Skv, KV, hd))
+    valid = int(jax.random.randint(kn, (), 2, Skv + 1))
+    pos = jnp.asarray(valid - 1)
+    vl = jnp.asarray(valid)
+    direct = _decode_direct(q, k, v, pos, vl, True, None, None)
+    scan, _ = _fwd_scan(q, k, v, pos, vl, True, None, 8, None)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(scan), atol=3e-5)

@@ -1,0 +1,94 @@
+"""Serving engine tests: prefill/decode consistency with full forward,
+continuous batching slot reuse, int8 KV cache accuracy."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig, get_config
+from repro.models import forward, init, init_caches, lm_logits
+from repro.serve import Engine, Request, build_decode, build_prefill
+
+RC = RunConfig(dtype="float32", param_dtype="float32", remat="none")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "falcon-mamba-7b", "hymba-1.5b", "deepseek-v2-lite-16b"])
+def test_incremental_matches_full(arch):
+    """Prefill(T) then decode(T+1..) produces the same hidden states as one
+    full forward over the whole sequence."""
+    cfg = get_config(arch + "_smoke")
+    if cfg.num_experts:
+        # capacity depends on S, so different S drops different tokens;
+        # make dispatch effectively dropless to isolate cache correctness.
+        cfg = cfg.replace(capacity_factor=16.0)
+    key = jax.random.PRNGKey(0)
+    params = init(cfg, RC, key)
+    B, T, extra = 2, 8, 4
+    toks = jax.random.randint(key, (B, T + extra), 0, cfg.vocab_size)
+
+    h_full, _, _ = forward(cfg, RC, params, {"tokens": toks})
+
+    caches = init_caches(cfg, RC, B, T + extra)
+    _, caches, _ = forward(cfg, RC, params, {"tokens": toks[:, :T]}, caches=caches, cache_pos=0)
+    hs = []
+    for i in range(extra):
+        h1, caches, _ = forward(
+            cfg, RC, params, {"tokens": toks[:, T + i : T + i + 1]},
+            caches=caches, cache_pos=T + i,
+        )
+        hs.append(h1)
+    h_inc = jnp.concatenate(hs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(h_full[:, T:, :]), np.asarray(h_inc), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_engine_continuous_batching():
+    cfg = get_config("qwen3-0.6b_smoke")
+    params = init(cfg, RC, jax.random.PRNGKey(1))
+    eng = Engine(cfg, RC, params, capacity=64, max_batch=2)
+    for rid in range(5):  # more requests than slots -> queue + reuse
+        eng.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=4))
+    eng.run()
+    done = [r for r in eng.slots if r] + eng.queue
+    assert not eng.queue
+    finished = [r for r in [s for s in eng.slots if s]]
+    assert all(len(r.out) >= 4 for r in finished)
+
+
+def test_int8_kv_cache_close_to_fp():
+    cfg = get_config("qwen3-0.6b_smoke")
+    rc8 = dataclasses.replace(RC, kv_cache_dtype="int8")
+    params = init(cfg, RC, jax.random.PRNGKey(2))
+    B, T = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, cfg.vocab_size)
+
+    def last_logits(rc):
+        caches = init_caches(cfg, rc, B, T + 1)
+        pre = build_prefill(cfg, rc)
+        caches, logits = pre(params, caches, {"tokens": toks})
+        return logits
+
+    lf = last_logits(RC)
+    l8 = last_logits(rc8)
+    # int8 KV adds noise but ranking of the argmax should survive
+    corr = np.corrcoef(np.asarray(lf).ravel(), np.asarray(l8).ravel())[0, 1]
+    assert corr > 0.98, corr
+
+
+def test_decode_step_is_fixed_shape():
+    """Decode at different positions reuses one compiled executable."""
+    cfg = get_config("qwen3-0.6b_smoke")
+    params = init(cfg, RC, jax.random.PRNGKey(4))
+    dec = jax.jit(build_decode(cfg, RC))
+    caches = init_caches(cfg, RC, 2, 32)
+    t = jnp.ones((2, 1), jnp.int32)
+    caches, l1 = dec(params, caches, t, jnp.asarray(0, jnp.int32))
+    n0 = dec._cache_size() if hasattr(dec, "_cache_size") else None
+    caches, l2 = dec(params, caches, t, jnp.asarray(1, jnp.int32))
+    if n0 is not None:
+        assert dec._cache_size() == n0
+    assert l1.shape == l2.shape == (2, cfg.vocab_size)

@@ -1,0 +1,145 @@
+"""Training substrate tests: loss decreases, checkpoint/resume equivalence,
+injected-failure recovery, 8-bit moments, EF compression, straggler watchdog."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig, ShapeConfig, get_config
+from repro.data import make_batches
+from repro.models import init
+from repro.optim import adamw_update, ef_compress, init_ef_state, init_opt_state, lr_schedule
+from repro.train import InjectedFailure, Trainer, build_train_step, init_train_state
+from repro.train import checkpoint as ckpt
+
+CFG = get_config("smollm-360m_smoke")
+RC = RunConfig(
+    dtype="float32", param_dtype="float32", remat="none",
+    lr=1e-2, warmup_steps=5, total_steps=60,
+)
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+
+
+def test_loss_decreases():
+    t = Trainer(CFG, RC, log_every=1000, log_fn=lambda *a: None)
+    batches = make_batches(CFG, SHAPE, seed=0)
+    hist = t.run(batches, 30)
+    batches.close()
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, (first, last)
+
+
+def test_microbatch_equivalence():
+    """k microbatches give the same grads as one full batch (linearity)."""
+    import dataclasses
+
+    rc1 = RC
+    rc2 = dataclasses.replace(RC, microbatches=4)
+    params = init(CFG, rc1, jax.random.PRNGKey(0))
+    s1 = init_train_state(CFG, rc1, params)
+    s2 = init_train_state(CFG, rc2, params)
+    batches = make_batches(CFG, SHAPE, seed=1)
+    batch = next(batches)
+    batches.close()
+    n1, m1 = jax.jit(build_train_step(CFG, rc1))(s1, batch)
+    n2, m2 = jax.jit(build_train_step(CFG, rc2))(s2, batch)
+    for a, b in zip(jax.tree.leaves(n1["params"]), jax.tree.leaves(n2["params"])):
+        np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_checkpoint_resume_equivalence(tmp_path):
+    """train 6 = train 3 + crash + resume 3 (bitwise params)."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    batches = lambda: make_batches(CFG, SHAPE, seed=2)
+
+    t_full = Trainer(CFG, RC, ckpt_dir=d1, ckpt_every=3, log_fn=lambda *a: None)
+    it = batches()
+    t_full.run(it, 6)
+    it.close()
+
+    t_a = Trainer(CFG, RC, ckpt_dir=d2, ckpt_every=3,
+                  fail_at_step=4, log_fn=lambda *a: None)
+    it = batches()
+    with pytest.raises(InjectedFailure):
+        t_a.run(it, 6)
+    it.close()
+    t_a.saver.wait()
+
+    # restart: auto-resume from step 3, replay the stream from there
+    t_b = Trainer(CFG, RC, ckpt_dir=d2, ckpt_every=3, log_fn=lambda *a: None)
+    assert t_b.step == 3
+    it = make_batches(CFG, SHAPE, seed=2, start_step=3)
+    t_b.run(it, 3)
+    it.close()
+
+    for a, b in zip(
+        jax.tree.leaves(t_full.state["params"]), jax.tree.leaves(t_b.state["params"])
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip_and_dtype(tmp_path):
+    params = init(CFG, RC, jax.random.PRNGKey(3))
+    state = init_train_state(CFG, RC, params)
+    ckpt.save(str(tmp_path), 7, state)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored, manifest = ckpt.restore(str(tmp_path), 7, state)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_moments_track_fp32():
+    """Quantized-moment AdamW stays close to fp32 AdamW over steps."""
+    rc8 = RunConfig(dtype="float32", param_dtype="float32", moments_dtype="int8",
+                    lr=1e-2, warmup_steps=0, total_steps=100)
+    rcf = RunConfig(dtype="float32", param_dtype="float32",
+                    lr=1e-2, warmup_steps=0, total_steps=100)
+    key = jax.random.PRNGKey(4)
+    p = {"w": jax.random.normal(key, (32, 64))}
+    s8, sf = init_opt_state(p, rc8), init_opt_state(p, rcf)
+    p8 = pf = p
+    for i in range(10):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (32, 64)) * 0.1}
+        p8, s8, _ = adamw_update(g, s8, rc8, jnp.float32)
+        pf, sf, _ = adamw_update(g, sf, rcf, jnp.float32)
+    diff = float(jnp.abs(p8["w"] - pf["w"]).max())
+    scale = float(jnp.abs(pf["w"] - p["w"]).max())
+    assert diff < 0.15 * scale + 1e-4, (diff, scale)
+
+
+def test_ef_compression_unbiased_over_time():
+    """Error feedback: sum of compressed grads ≈ sum of true grads."""
+    key = jax.random.PRNGKey(5)
+    g_true = [jax.random.normal(jax.random.fold_in(key, i), (64,)) for i in range(30)]
+    ef = init_ef_state({"w": g_true[0]})
+    tot_c = jnp.zeros((64,))
+    for g in g_true:
+        cg, ef = ef_compress({"w": g}, ef)
+        tot_c = tot_c + cg["w"]
+    tot_t = sum(g_true)
+    resid = float(jnp.abs(tot_c - tot_t).max())
+    per_step_q_err = float(jnp.abs(ef["w"]).max())
+    # residual bounded by one step's quantization error, not 30 steps' worth
+    assert resid <= per_step_q_err + 1e-5
+
+
+def test_lr_schedule_shape():
+    rc = RunConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(rc, jnp.asarray(0.0))) == 0.0
+    assert abs(float(lr_schedule(rc, jnp.asarray(10.0))) - 1.0) < 1e-6
+    assert float(lr_schedule(rc, jnp.asarray(100.0))) < 0.11
+
+
+def test_straggler_watchdog():
+    from repro.train import StepClock
+
+    c = StepClock(factor=3.0)
+    for _ in range(20):
+        c.record(0.01)
+    assert c.record(0.05) is True
+    assert c.stragglers == 1
+    s = c.summary()
+    assert s["p99_ms"] >= s["p50_ms"]
