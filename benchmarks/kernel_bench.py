@@ -1,14 +1,25 @@
-"""Kernel micro-benchmark: exactness sweep + CPU wall time per dispatch path.
+"""Kernel micro-benchmark: exactness sweep + fused-vs-unfused pipeline A/B.
 
-For each kernel (int8 GEMM, packed int4/int2 GEMM, thermometer-decomposed
-temporal GEMM, quantize) sweeps shapes and checks bit-exactness of the
-Pallas body (interpret mode) and the XLA path against the jnp oracle, then
-times the XLA path (what CPU users run; TPU would run the compiled Pallas
-kernels, which cannot be timed here).
+Two sections:
+
+1. **Exactness sweep** — for each kernel (int8 GEMM, packed int4/int2 GEMM,
+   thermometer-decomposed temporal GEMM, fused pipeline) checks bit-exactness
+   of the Pallas body (interpret mode) and the XLA path against the jnp
+   oracle, then times the XLA path (what CPU users run; TPU would run the
+   compiled Pallas kernels, which cannot be timed here).
+2. **Pipeline A/B** — times the complete dynamic-quant linear layer through
+   qlinear.gemm with ``fused=True`` vs ``fused=False`` on the XLA path and
+   counts device dispatches for both (DESIGN.md §4's ≥6 → 2 claim, measured).
+
+Writes ``benchmarks/BENCH_kernels.json`` so the perf trajectory is tracked
+across PRs. Usage: ``PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -17,6 +28,9 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.ref import matmul_int_ref
+from repro.quant import GemmBackend, gemm
+
+_OUT = pathlib.Path(__file__).resolve().parent / "BENCH_kernels.json"
 
 
 def _rand_int8(key, shape, bits=8):
@@ -33,12 +47,8 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def run(fast: bool = False) -> dict:
+def bench_exactness(shapes, out):
     key = jax.random.PRNGKey(0)
-    shapes = [(64, 64, 64), (128, 256, 128)] if fast else [
-        (64, 64, 64), (128, 256, 128), (256, 512, 256), (512, 512, 512),
-    ]
-    out = {"exact": True, "timings": {}}
     print(f"\n{'kernel':<18} {'shape':<18} {'xla ms':>8} {'exact(xla)':>11} {'exact(interp)':>14}")
     for (M, K, N) in shapes:
         ka, kb = jax.random.split(jax.random.fold_in(key, M * N))
@@ -78,9 +88,80 @@ def run(fast: bool = False) -> dict:
         ok = bool((y == matmul_int_ref(a, b)).all())
         out["exact"] &= ok
         print(f"{f'temporal_gemm w{bits}':<18} {'32x16x32':<18} {'-':>8} {str(ok):>11} {'-':>14}")
+
+
+def bench_fused_pipeline(shapes, out, iters=10):
+    """A/B the full dynamic-quant linear layer: fused vs unfused, XLA path."""
+    rng = np.random.default_rng(0)
+    print(f"\n{'pipeline (int8 dynamic+stats-off)':<34} {'unfused ms':>11} {'fused ms':>9} "
+          f"{'speedup':>8} {'GMAC/s':>8} {'disp u→f':>9}")
+    results = {}
+    for (M, K, N) in shapes:
+        x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+        w = jnp.asarray(rng.normal(0, 0.1, (K, N)), jnp.float32)
+        b = jnp.asarray(rng.normal(0, 0.1, (N,)), jnp.float32)
+        be_f = GemmBackend("int8", impl="xla", fused=True)
+        be_u = GemmBackend("int8", impl="xla", fused=False)
+
+        y_f = gemm(x, w, backend=be_f, bias=b)
+        y_u = gemm(x, w, backend=be_u, bias=b)
+        exact = bool((y_f == y_u).all())
+        out["exact"] &= exact
+
+        t_u = _time(lambda x, w: gemm(x, w, backend=be_u, bias=b), x, w, iters=iters)
+        t_f = _time(lambda x, w: gemm(x, w, backend=be_f, bias=b), x, w, iters=iters)
+
+        # dispatch counts include the stats sweeps (the profiling configuration)
+        with ops.counting_dispatches() as log_u:
+            gemm(x, w, backend=be_u.with_stats(), bias=b)
+        with ops.counting_dispatches() as log_f:
+            gemm(x, w, backend=be_f.with_stats(), bias=b)
+
+        gmacs = M * K * N / t_f / 1e9
+        tag = f"{M}x{K}x{N}"
+        results[tag] = {
+            "unfused_ms": t_u * 1e3,
+            "fused_ms": t_f * 1e3,
+            "speedup": t_u / t_f,
+            "fused_gmacs": gmacs,
+            "dispatches_unfused": len(log_u),
+            "dispatches_fused": len(log_f),
+            "bit_exact": exact,
+        }
+        print(f"{tag:<34} {t_u*1e3:>11.2f} {t_f*1e3:>9.2f} {t_u/t_f:>7.2f}x "
+              f"{gmacs:>8.1f} {len(log_u):>4}→{len(log_f)}")
+    out["pipeline"] = results
+    worst = min(r["speedup"] for r in results.values())
+    dmax = max(r["dispatches_fused"] for r in results.values())
+    print(f"\nfused pipeline: min speedup {worst:.2f}x, max dispatches {dmax}")
+
+
+def run(fast: bool = False, write_json: bool | None = None) -> dict:
+    # default: only full-shape runs refresh the committed BENCH_kernels.json —
+    # a --fast run must never silently clobber the perf-trajectory baseline
+    if write_json is None:
+        write_json = not fast
+    shapes = [(64, 64, 64), (128, 256, 128)] if fast else [
+        (64, 64, 64), (128, 256, 128), (256, 512, 256), (512, 512, 512),
+    ]
+    out = {
+        "backend": jax.default_backend(),
+        "fast": fast,
+        "exact": True,
+        "timings": {},
+    }
+    bench_exactness(shapes, out)
+    bench_fused_pipeline(shapes, out, iters=5 if fast else 10)
     print(f"\nall kernels bit-exact: {out['exact']}")
+    if write_json:
+        _OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {_OUT}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fast", action="store_true", help="small shapes only")
+    p.add_argument("--no-json", action="store_true", help="skip BENCH_kernels.json")
+    args = p.parse_args()
+    run(fast=args.fast, write_json=False if args.no_json else None)

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Minimal CI: tier-1 test suite + kernel micro-bench (fast shapes).
+#
+#   ./scripts/ci.sh
+#
+# Optional test deps (hypothesis) are installed if a package index is
+# reachable; the suite passes without them (tests/conftest.py shims the
+# property tests into skips).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+    pip install --quiet 'hypothesis>=6' 2>/dev/null \
+        || echo "ci: hypothesis unavailable — property tests will skip"
+fi
+
+echo "== tier-1 tests"
+python -m pytest -x -q
+
+echo "== kernel bench (fast)"
+# fast runs never write BENCH_kernels.json (the committed artifact is the
+# full-shape run)
+python benchmarks/kernel_bench.py --fast
+
+echo "ci: OK"

@@ -40,6 +40,8 @@ class TuGemmStats(NamedTuple):
     serial_cycles: jnp.ndarray    # (...,)   total cycles, serial variant
     parallel_cycles: jnp.ndarray  # (...,)   total cycles, parallel variant
     max_abs: jnp.ndarray          # (...,)   max |value| over A and B (Fig 5 statistic)
+    act_max: jnp.ndarray | None = None  # (...,) max |A| alone — the feature-map
+    #                                     statistic Fig 5 profiles per layer
 
 
 def validate_range(x: jnp.ndarray, bitwidth: int) -> jnp.ndarray:
@@ -81,12 +83,12 @@ def tugemm(
         return y, None
 
     sc = step_cycles(A, B)
+    amax_a = jnp.abs(a).max(axis=(-1, -2))
     stats = TuGemmStats(
         step_cycles=sc,
         serial_cycles=sc.sum(axis=-1),
         parallel_cycles=sc.max(axis=-1),
-        max_abs=jnp.maximum(
-            jnp.abs(a).max(axis=(-1, -2)), jnp.abs(b).max(axis=(-1, -2))
-        ),
+        max_abs=jnp.maximum(amax_a, jnp.abs(b).max(axis=(-1, -2))),
+        act_max=amax_a,
     )
     return y, stats

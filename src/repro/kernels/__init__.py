@@ -1,15 +1,19 @@
 """Pallas TPU kernels for tuGEMM's compute hot-spots (+ refs and wrappers).
 
+- ``tugemm_fused``    one-pass quantize→GEMM→dequant(+stats) pipeline (§4)
 - ``tugemm_int8``     exact int8 GEMM, int32 accumulation (the perf path)
 - ``tugemm_packed``   plane-packed int4/int2 GEMM (sub-byte HBM traffic)
 - ``temporal_unary``  thermometer-decomposed GEMM (paper's C1, validation path)
-- ``unary_stats``     fused absmax reductions -> hardware cycle statistics
-- ``quantize``        fused symmetric quantization
+- ``unary_stats``     standalone absmax reductions -> hardware cycle statistics
+- ``quantize``        standalone symmetric quantization
 - ``ops``             public padded/platform-dispatched API
 - ``ref``             pure-jnp oracles for all of the above
 """
 
 from .ops import (
+    count_dispatch,
+    counting_dispatches,
+    matmul_fused,
     matmul_int8,
     matmul_packed,
     pack_weights,
@@ -19,6 +23,9 @@ from .ops import (
 )
 
 __all__ = [
+    "count_dispatch",
+    "counting_dispatches",
+    "matmul_fused",
     "matmul_int8",
     "matmul_packed",
     "pack_weights",

@@ -15,14 +15,17 @@ CPU convenience; on TPU the production shapes are already 128-aligned).
 
 from __future__ import annotations
 
+from contextlib import contextmanager
+
 import jax
 import jax.numpy as jnp
 
 from ..core.tugemm import TuGemmStats
 from . import ref
-from .packing import pack_planes, pad_to_multiple
+from .packing import BITS_TO_PLANES, pack_planes, pad_to_multiple
 from .quantize import quantize_sym_pallas
 from .temporal_unary import temporal_unary_gemm_pallas
+from .tugemm_fused import tugemm_fused_pallas
 from .tugemm_int8 import matmul_int8_pallas
 from .tugemm_packed import matmul_packed_pallas
 from .unary_stats import colabsmax_pallas, rowabsmax_pallas
@@ -30,13 +33,43 @@ from .unary_stats import colabsmax_pallas, rowabsmax_pallas
 __all__ = [
     "matmul_int8",
     "matmul_packed",
+    "matmul_fused",
     "temporal_gemm",
     "unary_step_stats",
     "quantize_sym",
     "pack_weights",
+    "count_dispatch",
+    "counting_dispatches",
 ]
 
-_PLANES = {8: 1, 4: 2, 2: 4}
+_PLANES = {8: 1, **BITS_TO_PLANES}
+
+# --------------------------------------------------------- dispatch counting
+# The fused pipeline's headline claim is "≥6 device dispatches → ≤2" for a
+# dynamic-quant linear layer. We measure it rather than assert it: every
+# operand-sized device pass (kernel launch or jnp composite over (M,K)/(K,N)/
+# (M,N) data) registers here; O(K) stats scalarization is excluded on both
+# paths. Counting happens at trace/eager-call level — wrap the pipeline call,
+# not a jitted cache hit.
+
+_dispatch_log: list[str] | None = None
+
+
+def count_dispatch(name: str, n: int = 1) -> None:
+    """Register ``n`` operand-sized device passes named ``name`` (if counting)."""
+    if _dispatch_log is not None:
+        _dispatch_log.extend([name] * n)
+
+
+@contextmanager
+def counting_dispatches():
+    """Collect pipeline dispatch names into the yielded list."""
+    global _dispatch_log
+    prev, _dispatch_log = _dispatch_log, []
+    try:
+        yield _dispatch_log
+    finally:
+        _dispatch_log = prev
 
 
 def _resolve(impl: str) -> tuple[str, bool]:
@@ -73,6 +106,7 @@ def matmul_int8(
     impl: str = "auto",
 ):
     """Exact int8 GEMM (tuGEMM contract). Returns y or (y, TuGemmStats)."""
+    count_dispatch("matmul_int8")
     path, interp = _resolve(impl)
     M, K = a.shape
     _, N = b.shape
@@ -95,6 +129,8 @@ def matmul_int8(
 
 def unary_step_stats(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "auto") -> TuGemmStats:
     """tuGEMM data-dependent cycle statistics for A (M,K) @ B (K,N)."""
+    count_dispatch("absmax_a")
+    count_dispatch("absmax_b")
     path, interp = _resolve(impl)
     if path == "xla":
         ca, rb, sc = ref.unary_stats_ref(a, b)
@@ -124,6 +160,7 @@ def unary_step_stats(a: jnp.ndarray, b: jnp.ndarray, *, impl: str = "auto") -> T
         serial_cycles=sc.sum(axis=-1),
         parallel_cycles=sc.max(axis=-1),
         max_abs=jnp.maximum(ca.max(), rb.max()),
+        act_max=ca.max(),
     )
 
 
@@ -134,6 +171,26 @@ def pack_weights(w: jnp.ndarray, bits: int) -> jnp.ndarray:
         return w.astype(jnp.int8)
     w = pad_to_multiple(w.astype(jnp.int8), 0, planes)
     return pack_planes(w, bits)
+
+
+def _pad_planes(
+    a: jnp.ndarray, Mp: int, planes: int, kp: int, kpp: int
+) -> jnp.ndarray:
+    """Pad A (M, planes·kp) to (Mp, planes·kpp) *plane-consistently*.
+
+    Zero-padding packed B's rows from kp to kpp keeps plane p's logical K
+    range at packed rows [0, kp) — so plane p of A must stay at columns
+    [p·kpp, p·kpp + kp), i.e. each plane's column segment is padded
+    individually before concatenation. (Appended packed-B rows are zero bytes
+    ⇒ every plane decodes to zero ⇒ exact.)
+    """
+    if kpp != kp:
+        segs = [
+            jnp.pad(a[:, p * kp : (p + 1) * kp], ((0, 0), (0, kpp - kp)))
+            for p in range(planes)
+        ]
+        a = jnp.concatenate(segs, axis=1)
+    return _pad2(a, Mp, planes * kpp)
 
 
 def matmul_packed(
@@ -148,6 +205,7 @@ def matmul_packed(
     A is zero-padded up to ``planes * packed_b.shape[0]`` logical K (matching
     ``pack_weights``' padding).
     """
+    count_dispatch("matmul_packed")
     path, interp = _resolve(impl)
     planes = _PLANES[bits]
     M, K = a.shape
@@ -160,20 +218,7 @@ def matmul_packed(
     bm, Mp = _block(M, 256)
     bn, Np = _block(N, 512)
     bkp, Kpp = _block(Kp_, 128)
-    ap = _pad2(a, Mp, planes * Kpp)
-    # re-pad plane-consistently: pad each plane's K range, i.e. repack
-    if Kpp != Kp_:
-        # zero rows appended per plane: easiest is pad packed rows directly
-        # (bits of appended packed rows are zero ⇒ all planes zero ⇒ exact)
-        ap = _pad2(a, Mp, planes * Kpp)
-        # move plane p rows: logical K layout [p*Kpp + r] vs packed rows r
-        # zero-padding packed rows keeps plane p's logical rows at
-        # [p*Kp_ .. p*Kp_+Kp_) — remap A columns accordingly.
-        cols = []
-        for p in range(planes):
-            seg = a[:, p * Kp_ : (p + 1) * Kp_]
-            cols.append(jnp.pad(seg, ((0, 0), (0, Kpp - Kp_))))
-        ap = _pad2(jnp.concatenate(cols, axis=1), Mp, planes * Kpp)
+    ap = _pad_planes(a, Mp, planes, Kp_, Kpp)
     pb = _pad2(packed_b.astype(jnp.int8), Kpp, Np)
     y = matmul_packed_pallas(
         ap, pb, bits=bits, block_m=bm, block_n=bn, block_k=bkp, interpret=interp
@@ -181,10 +226,107 @@ def matmul_packed(
     return y[:M, :N]
 
 
+def _assemble_stats(ca: jnp.ndarray, rb: jnp.ndarray) -> TuGemmStats:
+    """TuGemmStats from the two logical-K absmax vectors (core cycle model)."""
+    sc = ca * jnp.maximum(rb, 1)
+    return TuGemmStats(
+        step_cycles=sc,
+        serial_cycles=sc.sum(axis=-1),
+        parallel_cycles=sc.max(axis=-1),
+        max_abs=jnp.maximum(ca.max(), rb.max()),
+        act_max=ca.max(),
+    )
+
+
+def matmul_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    bits: int,
+    w_quantized: bool = False,
+    collect_stats: bool = False,
+    out_dtype=None,
+    impl: str = "auto",
+):
+    """Fused dynamic-quant linear layer: ONE pass for quantize→GEMM→dequant.
+
+    ``Y = clip(round(X/sx)) @ Wq * (sx*sw[n]) + bias`` with Wq either
+    quantized on load from float w (K, N) (``w_quantized=False``, dynamic
+    mode) or taken from storage (``w_quantized=True``): int8 (K, N) for
+    bits=8, plane-packed (ceil(K/planes), N) for int4/int2 (pack_weights
+    layout — the sub-byte plane decode fuses into the same kernel).
+
+    sx: per-tensor activation scale (scalar); sw: per-column weight scale
+    (N,). Returns y (M, N) ``out_dtype`` (default float32), or
+    (y, TuGemmStats) when ``collect_stats`` — the stats come out of the same
+    pass, not extra operand sweeps. Bit-exact against the unfused
+    quantize/matmul_int8|matmul_packed/dequant composition.
+    """
+    count_dispatch("matmul_fused")
+    path, interp = _resolve(impl)
+    packed = w_quantized and bits < 8
+    planes = _PLANES[bits] if packed else 1
+    w_mode = "packed" if packed else ("int8" if w_quantized else "quant")
+    M, K = x.shape
+    Kw, N = w.shape
+    Klog = planes * Kw
+    assert K <= Klog if packed else K == Kw, (x.shape, w.shape, bits)
+    odt = jnp.dtype(out_dtype if out_dtype is not None else x.dtype).name
+    sx2 = jnp.asarray(sx, jnp.float32).reshape(1, 1)
+    sw2 = jnp.asarray(sw, jnp.float32).reshape(1, N)
+    if packed and K < Klog:
+        x = jnp.pad(x, ((0, 0), (0, Klog - K)))
+
+    if path == "xla":
+        out = ref.fused_gemm_ref(
+            x, w, sx2, sw2, bias,
+            bits=bits, w_mode=w_mode, collect_stats=collect_stats, out_dtype=odt,
+        )
+        if not collect_stats:
+            return out
+        y, ca, rb = out
+        return y, _assemble_stats(ca[:K], rb[:K])
+
+    bm, Mp = _block(M, 256)
+    bn, Np = _block(N, 512)
+    bkw, Kwp = _block(Kw, 128 if packed else 256)
+    if packed:
+        xp = _pad_planes(x, Mp, planes, Kw, Kwp)
+        wp = _pad2(w.astype(jnp.int8), Kwp, Np)
+    else:
+        xp = _pad2(x, Mp, Kwp)
+        wp = (
+            _pad2(w.astype(jnp.int8), Kwp, Np)
+            if w_quantized
+            else _pad2(w, Kwp, Np)
+        )
+    swp = jnp.pad(sw2, ((0, 0), (0, Np - N)), constant_values=1.0)
+    bp = None if bias is None else jnp.pad(bias.reshape(1, N), ((0, 0), (0, Np - N)))
+    out = tugemm_fused_pallas(
+        xp, wp, sx2, swp, bp,
+        bits=bits, w_mode=w_mode, collect_stats=collect_stats, out_dtype=odt,
+        block_m=bm, block_n=bn, block_k=bkw, interpret=interp,
+    )
+    if not collect_stats:
+        return out[:M, :N]
+    y, ca, rb = out
+    if packed:
+        # plane-major → logical K order: plane p's real rows are [0, Kw)
+        ca = jnp.concatenate([ca[p, :Kw] for p in range(planes)])
+        rb = jnp.concatenate([rb[:Kw, p] for p in range(planes)])
+    else:
+        ca, rb = ca[0], rb[:, 0]
+    return y[:M, :N], _assemble_stats(ca[:K], rb[:K])
+
+
 def temporal_gemm(
     a: jnp.ndarray, b: jnp.ndarray, *, bitwidth: int, impl: str = "auto"
 ) -> jnp.ndarray:
     """Thermometer-decomposed exact GEMM (validation path, DESIGN.md §2B)."""
+    count_dispatch("temporal_gemm")
     path, interp = _resolve(impl)
     if path == "xla":
         return ref.temporal_unary_gemm_ref(a, b, bitwidth)
@@ -213,6 +355,7 @@ def quantize_sym(
     impl: str = "auto",
 ) -> jnp.ndarray:
     """Symmetric quantization of x (M, N) by per-tensor or per-column scale."""
+    count_dispatch("quantize_sym")
     path, interp = _resolve(impl)
     M, N = x.shape
     inv = 1.0 / jnp.asarray(scale, dtype=jnp.float32)

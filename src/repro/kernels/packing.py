@@ -13,9 +13,11 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["pack_planes", "unpack_plane", "pad_to_multiple"]
+__all__ = ["BITS_TO_PLANES", "pack_planes", "unpack_plane", "pad_to_multiple"]
 
-_BITS_TO_PLANES = {4: 2, 2: 4}
+# sub-byte plane counts — the single source of truth for the bits→planes
+# map (ops/tugemm_fused/ref extend it with the trivial 8-bit entry)
+BITS_TO_PLANES = {4: 2, 2: 4}
 
 
 def pad_to_multiple(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
@@ -35,7 +37,7 @@ def pack_planes(w: jnp.ndarray, bits: int) -> jnp.ndarray:
     (K/planes, N) int8 where plane ``p`` of row k holds ``w[k + p*K/planes, n]``
     in bit positions ``[p*bits, (p+1)*bits)``.
     """
-    planes = _BITS_TO_PLANES[bits]
+    planes = BITS_TO_PLANES[bits]
     K = w.shape[0]
     if K % planes:
         raise ValueError(f"K={K} must be a multiple of {planes} for {bits}-bit packing")
@@ -51,7 +53,7 @@ def pack_planes(w: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 def unpack_plane(packed: jnp.ndarray, bits: int, plane: int) -> jnp.ndarray:
     """Extract plane ``plane`` as sign-extended int8 (works inside Pallas)."""
-    planes = _BITS_TO_PLANES[bits]
+    planes = BITS_TO_PLANES[bits]
     if not 0 <= plane < planes:
         raise ValueError(f"plane {plane} out of range for {bits}-bit")
     shift_up = 8 - (plane + 1) * bits

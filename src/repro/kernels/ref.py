@@ -7,9 +7,12 @@ integer paths, allclose for float paths).
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
-from .packing import unpack_plane
+from .packing import BITS_TO_PLANES, unpack_plane
 
 __all__ = [
     "matmul_int_ref",
@@ -17,6 +20,8 @@ __all__ = [
     "temporal_unary_gemm_ref",
     "unary_stats_ref",
     "quantize_sym_ref",
+    "fused_gemm_ref",
+    "dequant_bias_ref",
 ]
 
 
@@ -34,7 +39,7 @@ def packed_matmul_ref(
     a: jnp.ndarray, packed_b: jnp.ndarray, bits: int, c: jnp.ndarray | None = None
 ) -> jnp.ndarray:
     """Oracle for the plane-packed int4/int2 GEMM: unpack planes, then GEMM."""
-    planes = {4: 2, 2: 4}[bits]
+    planes = BITS_TO_PLANES[bits]
     kp = packed_b.shape[0]
     b = jnp.concatenate(
         [unpack_plane(packed_b, bits, p) for p in range(planes)], axis=0
@@ -63,6 +68,75 @@ def unary_stats_ref(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.nd
     ca = jnp.abs(a.astype(jnp.int32)).max(axis=0)
     rb = jnp.abs(b.astype(jnp.int32)).max(axis=1)
     return ca, rb, ca * jnp.maximum(rb, 1)
+
+
+def _dequant_bias(acc, sx, sw, bias, out_dtype):
+    """Shared epilogue tail: int32 acc → out_dtype, + bias.
+
+    Used inside ``fused_gemm_ref`` AND (jitted standalone, as
+    ``dequant_bias_ref``) by the unfused qlinear pipeline, so both paths run
+    the structurally identical float graph — XLA contracts the dequant
+    multiply + bias add into an FMA, and only an identical graph guarantees
+    identical rounding (bit-exact fused vs unfused).
+    """
+    y = (acc.astype(jnp.float32) * (sx * sw)).astype(out_dtype)
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(y.dtype)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def dequant_bias_ref(acc, sx, sw, bias, *, out_dtype: str = "float32"):
+    """The unfused pipeline's single 'XLA dequant+bias epilogue' dispatch."""
+    return _dequant_bias(
+        acc, sx.reshape(1, 1), sw.reshape(1, -1), bias, jnp.dtype(out_dtype)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "w_mode", "collect_stats", "out_dtype")
+)
+def fused_gemm_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    bits: int,
+    w_mode: str = "quant",
+    collect_stats: bool = False,
+    out_dtype: str = "float32",
+):
+    """Oracle (and jitted XLA production path) for tugemm_fused_pallas.
+
+    Same operand contract as the kernel but on *logical* shapes: x (M, K)
+    float, sw (1, N) f32, and for ``w_mode="packed"`` x's K must already be
+    zero-padded to ``planes * w.shape[0]``. Every float op matches the
+    unfused quant/quantize.py → qlinear.py composition bit-for-bit.
+
+    Returns y, or (y, colabsmax (K,), rowabsmax (K,)) with stats — here both
+    stats vectors are already in logical K order.
+    """
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) / sx[0, 0]), lo, hi).astype(jnp.int8)
+    if w_mode == "packed":
+        planes = BITS_TO_PLANES[bits]
+        wq = jnp.concatenate(
+            [unpack_plane(w, bits, p) for p in range(planes)], axis=0
+        )
+    elif w_mode == "quant":
+        wq = jnp.clip(jnp.round(w.astype(jnp.float32) / sw), lo, hi).astype(jnp.int8)
+    else:  # "int8"
+        wq = w
+    assert xq.shape[1] == wq.shape[0], (x.shape, w.shape, w_mode)
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    y = _dequant_bias(acc, sx, sw, bias, jnp.dtype(out_dtype))
+    if not collect_stats:
+        return y
+    ca = jnp.abs(xq.astype(jnp.int32)).max(axis=0)
+    rb = jnp.abs(wq.astype(jnp.int32)).max(axis=1)
+    return y, ca, rb
 
 
 def quantize_sym_ref(

@@ -1,0 +1,238 @@
+"""Pallas TPU kernel: fused dynamic-quant tuGEMM pipeline (DESIGN.md §4).
+
+One ``pallas_call`` computes the *entire* low-precision linear layer
+
+    Y = dequant(quant(X) @ quant(W)) + bias
+      = clip(round(X / sx)) @ clip(round(W / sw)) * (sx * sw[n]) + bias[n]
+
+— the software analogue of the paper's single-unit datapath. The unfused
+pipeline (kernels/quantize.py → tugemm_int8.py → XLA epilogue → two
+unary_stats.py sweeps) makes ~6 HBM round-trips over the operands; this
+kernel makes exactly one:
+
+* X (float) is quantized **on load** inside the K-loop — the int8 carrier
+  never exists in HBM.
+* W is either quantized on load (dynamic mode), consumed as stored int8
+  (prequant int8), or plane-unpacked in-register (prequant int4/int2,
+  ``w_mode="packed"`` — the packed GEMM's per-plane index maps, so the
+  sub-byte HBM saving composes with the fusion).
+* Accumulation stays int32 in a VMEM scratch block across the K grid; the
+  epilogue applies ``sx * sw[n]``, casts to the output dtype, and adds bias —
+  the int32 (M, N) intermediate never round-trips through HBM.
+* With ``collect_stats=True`` the same pass threads the tuGEMM cycle-model
+  absmax accumulators (max_m |Xq[m,k]| and max_n |Wq[k,n]|) through two tiny
+  O(K) VMEM scratch buffers, so ``TuGemmStats`` costs zero extra operand
+  sweeps. Scratch (not output windows) carries the running maxima because
+  the stats are (k)-indexed while the grid revisits them across (i, j)
+  non-consecutively — only scratch is guaranteed to persist across the
+  sequential grid; the output blocks are written exactly once, on the final
+  (i, j) sweep.
+
+Grid = (M/bm, N/bn, K/bk), K innermost (revisit-accumulate, same as
+tugemm_int8.py). All shapes pre-padded to block multiples by ops.py; padding
+is zeros, which quantizes to 0 and is invisible to the exact integer GEMM
+and the absmax statistics (weight-scale padding uses 1.0 to avoid 0/0).
+
+Bit-exactness contract: every float op here (round-to-nearest-even, divide
+by scale, ``acc * (sx*sw)``, dtype cast, bias add) is the *same* op in the
+same order as the unfused quant/quantize.py → qlinear.py composition, so
+fused and unfused paths agree bit-for-bit — tests/test_fused.py enforces it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .packing import BITS_TO_PLANES, unpack_plane
+
+__all__ = ["tugemm_fused_pallas"]
+
+_PLANES = {8: 1, **BITS_TO_PLANES}
+
+
+def _quant(x, inv_or_scale_div, lo, hi):
+    """round(x / s), clipped — identical formula to quant.quantize."""
+    q = jnp.round(x.astype(jnp.float32) / inv_or_scale_div)
+    return jnp.clip(q, lo, hi).astype(jnp.int8)
+
+
+def _kernel(
+    *refs, n_i, n_j, n_k, block_k, bits, lo, hi, w_mode, planes, has_bias,
+    collect_stats,
+):
+    it = iter(refs)
+    x_refs = [next(it) for _ in range(planes)]
+    w_ref = next(it)
+    sx_ref = next(it)
+    sw_ref = next(it)
+    bias_ref = next(it) if has_bias else None
+    o_ref = next(it)
+    ca_ref = next(it) if collect_stats else None
+    rb_ref = next(it) if collect_stats else None
+    acc_ref = next(it)
+    ca_acc = next(it) if collect_stats else None
+    rb_acc = next(it) if collect_stats else None
+
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sx = sx_ref[0, 0]
+    acc = acc_ref[...]
+    ca_rows, rb_cols = [], []
+    for p in range(planes):
+        xq = _quant(x_refs[p][...], sx, lo, hi)
+        if w_mode == "packed":
+            wq = unpack_plane(w_ref[...], bits, p)
+        elif w_mode == "quant":
+            wq = _quant(w_ref[...], sw_ref[...], lo, hi)
+        else:  # "int8": prequantized dense carrier
+            wq = w_ref[...]
+        acc += jnp.dot(xq, wq, preferred_element_type=jnp.int32)
+        if collect_stats:
+            ca_rows.append(jnp.abs(xq.astype(jnp.int32)).max(axis=0, keepdims=True))
+            rb_cols.append(jnp.abs(wq.astype(jnp.int32)).max(axis=1, keepdims=True))
+    acc_ref[...] = acc
+
+    if collect_stats:
+        # accumulate in full-K VMEM scratch — scratch is guaranteed to
+        # persist across the sequential grid, unlike non-consecutively
+        # revisited output windows — and flush write-only on the final (i, j)
+        # sweep, when k walks every block once
+        ca_blk = jnp.concatenate(ca_rows, axis=0)  # (planes, bk)
+        rb_blk = jnp.concatenate(rb_cols, axis=1)  # (bk, planes)
+        ks = pl.ds(k * block_k, block_k)
+        first = jnp.logical_and(i == 0, j == 0)
+        last = jnp.logical_and(i == n_i - 1, j == n_j - 1)
+
+        @pl.when(first)
+        def _init_stats():
+            ca_acc[:, ks] = ca_blk
+            rb_acc[ks, :] = rb_blk
+
+        @pl.when(jnp.logical_not(first))
+        def _acc_stats():
+            ca_acc[:, ks] = jnp.maximum(ca_acc[:, ks], ca_blk)
+            rb_acc[ks, :] = jnp.maximum(rb_acc[ks, :], rb_blk)
+
+        @pl.when(last)
+        def _flush_stats():
+            ca_ref[...] = ca_acc[:, ks]
+            rb_ref[...] = rb_acc[ks, :]
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        # same float-op sequence as ref._dequant_bias — the compiler contracts
+        # the dequant multiply + bias add identically on both paths
+        y = acc_ref[...].astype(jnp.float32) * (sx_ref[...] * sw_ref[...])
+        y = y.astype(o_ref.dtype)
+        if has_bias:
+            y = y + bias_ref[...].astype(o_ref.dtype)
+        o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bits", "w_mode", "collect_stats", "out_dtype",
+        "block_m", "block_n", "block_k", "interpret",
+    ),
+)
+def tugemm_fused_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    bits: int,
+    w_mode: str = "quant",          # quant | int8 | packed
+    collect_stats: bool = False,
+    out_dtype: str = "float32",
+    block_m: int = 256,
+    block_n: int = 512,
+    block_k: int = 256,
+    interpret: bool = False,
+):
+    """Fused quantize→GEMM→dequant(+bias)(+stats) in one pallas_call.
+
+    x (M, K) float, sx (1, 1) f32 per-tensor scale, sw (1, N) f32 per-column
+    scale, bias (1, N) float or None. W layout by ``w_mode``:
+
+    - ``quant``:  (K, N) float, quantized on load with sw (dynamic mode)
+    - ``int8``:   (K, N) int8, already quantized (prequant, 8-bit)
+    - ``packed``: (K/planes, N) plane-packed int8 (prequant int4/int2);
+      ``block_k`` counts *packed* rows and x must be plane-remapped to
+      ``planes * K_packed`` columns (ops._pad_planes)
+
+    Returns y (M, N) out_dtype, or (y, colabsmax, rowabsmax) with stats:
+    dense → ca (1, K) / rb (K, 1); packed → ca (planes, Kp) row p = plane p,
+    rb (Kp, planes) column p = plane p (ops.py reassembles logical K order).
+
+    All dims must be pre-padded to block multiples (ops.py does this).
+    """
+    planes = _PLANES[bits] if w_mode == "packed" else 1
+    M, Kx = x.shape
+    Kw, N = w.shape
+    assert Kx == planes * Kw, (x.shape, w.shape, w_mode, bits)
+    assert M % block_m == 0 and N % block_n == 0 and Kw % block_k == 0, (
+        (M, N, Kw), (block_m, block_n, block_k))
+    assert sx.shape == (1, 1) and sw.shape == (1, N), (sx.shape, sw.shape)
+    grid = (M // block_m, N // block_n, Kw // block_k)
+    n_kb = grid[2]
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+    def x_map(p):
+        return lambda i, j, k, _p=p: (i, k + _p * n_kb)
+
+    in_specs = [pl.BlockSpec((block_m, block_k), x_map(p)) for p in range(planes)]
+    in_specs += [
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+    ]
+    operands = [*([x] * planes), w, sx, sw]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)))
+        operands.append(bias.reshape(1, N))
+
+    out_specs = [pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j))]
+    out_shape = [jax.ShapeDtypeStruct((M, N), jnp.dtype(out_dtype))]
+    if collect_stats:
+        out_specs += [
+            pl.BlockSpec((planes, block_k), lambda i, j, k: (0, k)),
+            pl.BlockSpec((block_k, planes), lambda i, j, k: (k, 0)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((planes, Kw), jnp.int32),
+            jax.ShapeDtypeStruct((Kw, planes), jnp.int32),
+        ]
+
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
+    if collect_stats:
+        scratch += [
+            pltpu.VMEM((planes, Kw), jnp.int32),
+            pltpu.VMEM((Kw, planes), jnp.int32),
+        ]
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            n_i=grid[0], n_j=grid[1], n_k=n_kb, block_k=block_k, bits=bits,
+            lo=lo, hi=hi, w_mode=w_mode, planes=planes,
+            has_bias=bias is not None, collect_stats=collect_stats,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+    return tuple(out) if collect_stats else out[0]

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .packing import unpack_plane
+from .packing import BITS_TO_PLANES, unpack_plane
 
 __all__ = ["matmul_packed_pallas"]
 
@@ -60,7 +60,7 @@ def matmul_packed_pallas(
     ``planes * block_k`` logical K. K must equal ``planes * packed_b.shape[0]``
     and all dims must be pre-padded to block multiples (ops.py).
     """
-    planes = {4: 2, 2: 4}[bits]
+    planes = BITS_TO_PLANES[bits]
     M, K = a.shape
     Kp, N = packed_b.shape
     assert K == planes * Kp, (a.shape, packed_b.shape, bits)

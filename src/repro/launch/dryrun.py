@@ -173,6 +173,21 @@ def build_cell(arch: str, shape, rc: RunConfig):
     )
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: it has
+    returned a plain dict, a Mapping-like (iterating keys, so ``dict(cost)``
+    breaks), or a one-element list of either."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return cost
+    if hasattr(cost, "items"):
+        return dict(cost.items())
+    return dict(cost)
+
+
 def run_cell(
     arch: str, shape, *, multi_pod: bool, out_dir: str | None = None, optimized: bool = False
 ) -> dict:
@@ -203,7 +218,7 @@ def run_cell(
     report = analyze(
         name,
         chips=chips,
-        cost=cost if isinstance(cost, dict) else dict(cost),
+        cost=_cost_dict(cost),
         hlo_text=hlo,
         model_flops=model_flops(cfg, shape),
         memory_per_chip=float(peak),

@@ -11,9 +11,17 @@ Backends (DESIGN.md §3):
     * ``prequant`` — weights quantized + plane-packed offline
       (``prequantize_tree``); serving path with 2-8× less weight HBM traffic.
 
-With ``collect_stats=True`` each GEMM also emits tuGEMM hardware statistics
-(max |value|, serial/parallel cycles) to the active ``quant.stats`` collector
-— the Fig 5 methodology as a framework feature.
+The hot path is *fused* (DESIGN.md §4): one scale reduction + one
+``ops.matmul_fused`` pass that quantizes on load, accumulates in int32
+on-chip, applies the dequant epilogue and bias, and — with
+``collect_stats=True`` — emits the tuGEMM hardware statistics (max |value|,
+serial/parallel cycles, the Fig 5 methodology) from the *same* pass. That is
+2 device dispatches where the unfused pipeline takes ≥6 (two quantizes, the
+GEMM, the dequant epilogue, and two standalone absmax sweeps).
+
+``GemmBackend(fused=False)`` keeps the legacy unfused composition — it is
+bit-exact against the fused path (outputs *and* stats; tests/test_fused.py)
+and is what benchmarks/kernel_bench.py A/Bs against.
 """
 
 from __future__ import annotations
@@ -24,7 +32,8 @@ import jax.numpy as jnp
 
 from ..core.encoding import int_range
 from ..kernels import ops
-from .quantize import compute_scale, quantize
+from ..kernels.ref import dequant_bias_ref
+from .quantize import compute_scale, fused_scales, quantize
 from .stats import record_stats
 
 __all__ = ["GemmBackend", "BF16", "gemm", "dense", "prequantize_tree"]
@@ -36,6 +45,7 @@ class GemmBackend:
     mode: str = "dynamic"         # dynamic | prequant (ignored for bf16)
     collect_stats: bool = False   # emit tuGEMM cycle stats per GEMM
     impl: str = "auto"            # kernel dispatch (kernels/ops.py)
+    fused: bool = True            # one-pass pipeline (False = legacy unfused)
 
     @property
     def bits(self) -> int:
@@ -53,16 +63,40 @@ def _flatten(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
     return x.reshape(-1, x.shape[-1]), lead
 
 
+def _emit_fused(
+    x2, w, sx, sw, bias, backend: GemmBackend, name: str, *, w_quantized: bool
+):
+    """Single fused dispatch + stats recording; returns the 2-D result."""
+    out = ops.matmul_fused(
+        x2, w, sx=sx, sw=sw, bias=bias,
+        bits=backend.bits, w_quantized=w_quantized,
+        collect_stats=backend.collect_stats, impl=backend.impl,
+    )
+    if not backend.collect_stats:
+        return out
+    y, stats = out
+    N = sw.reshape(-1).shape[0]
+    record_stats(
+        name, x2.shape[0], x2.shape[1], N,
+        stats.act_max, stats.serial_cycles, stats.parallel_cycles,
+    )
+    return y
+
+
 def gemm(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
     backend: GemmBackend = BF16,
     name: str = "gemm",
+    bias: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """x (..., K) · w (K, N) → (..., N), in x.dtype."""
+    """x (..., K) · w (K, N) [+ bias (N,)] → (..., N), in x.dtype."""
     if backend.kind == "bf16":
-        return jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
+        y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y
 
     bits = backend.bits
     x2, lead = _flatten(x)
@@ -74,11 +108,26 @@ def gemm(
     if scales is not None and name in scales:
         # static PTQ: fixed calibrated scale (per-GEMM-name)
         sx = jnp.asarray(scales[name] / (int_range(bits)[1]), jnp.float32)
+        sw = compute_scale(w, bits, axis=1)
+        ops.count_dispatch("scale_w")
+    elif backend.fused:
+        sx, sw = fused_scales(x2, w, bits)          # dynamic scales, 1 dispatch
+        ops.count_dispatch("fused_scales")
     else:
-        sx = compute_scale(x2, bits)                   # dynamic per-tensor scale
+        sx = compute_scale(x2, bits)                # dynamic per-tensor scale
+        sw = compute_scale(w, bits, axis=1)
+        ops.count_dispatch("scale_x")
+        ops.count_dispatch("scale_w")
+
+    if backend.fused:
+        y = _emit_fused(x2, w, sx, sw, bias, backend, name, w_quantized=False)
+        return y.reshape(*lead, w.shape[1])
+
+    # ------------------------------------------------ legacy unfused pipeline
     xq = quantize(x2, sx, bits)
-    sw = compute_scale(w, bits, axis=1)                # per-out-channel weight scale
     wq = quantize(w, sw.reshape(1, -1), bits)
+    ops.count_dispatch("quantize_x")
+    ops.count_dispatch("quantize_w")
     y_int = ops.matmul_int8(xq, wq, impl=backend.impl)
     if backend.collect_stats:
         stats = ops.unary_step_stats(xq, wq, impl=backend.impl)
@@ -88,26 +137,47 @@ def gemm(
             name, x2.shape[0], x2.shape[1], w.shape[1],
             jnp.abs(xq).max(), stats.serial_cycles, stats.parallel_cycles,
         )
-    y = y_int.astype(jnp.float32) * (sx * sw.reshape(1, -1))
-    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+    y = dequant_bias_ref(y_int, sx, sw, bias, out_dtype=jnp.dtype(x.dtype).name)
+    ops.count_dispatch("dequant_epilogue")
+    return y.reshape(*lead, w.shape[1])
 
 
-def _gemm_prequant(x: jnp.ndarray, leaf: dict, backend: GemmBackend, name: str) -> jnp.ndarray:
+def _gemm_prequant(
+    x: jnp.ndarray,
+    leaf: dict,
+    backend: GemmBackend,
+    name: str,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     bits = backend.bits
     x2, lead = _flatten(x)
     sx = compute_scale(x2, bits)
+    ops.count_dispatch("scale_x")
+    sw = leaf["qscale"]
+    N = sw.shape[0]
+
+    if backend.fused:
+        # fused path: plane decode happens inside the same kernel, and —
+        # unlike the legacy path — real cycle stats come out of the pass.
+        y = _emit_fused(
+            x2, leaf["qkernel"], sx, sw, bias, backend, name, w_quantized=True
+        )
+        return y.reshape(*lead, N)
+
     xq = quantize(x2, sx, bits)
+    ops.count_dispatch("quantize_x")
     if bits == 8:
         y_int = ops.matmul_int8(xq, leaf["qkernel"], impl=backend.impl)
     else:
         y_int = ops.matmul_packed(xq, leaf["qkernel"], bits=bits, impl=backend.impl)
-    sw = leaf["qscale"]
     if backend.collect_stats:
-        # stats need the logical (unpacked) weights' maxes — precomputed offline
-        record_stats(name, x2.shape[0], x2.shape[1], sw.shape[0],
+        # legacy path has no unpacked weights on hand: records activation max
+        # only, zero cycle counts (the fused path does better).
+        record_stats(name, x2.shape[0], x2.shape[1], N,
                      jnp.abs(xq).max(), jnp.zeros(()), jnp.zeros(()))
-    y = y_int.astype(jnp.float32) * (sx * sw.reshape(1, -1))
-    return y.reshape(*lead, sw.shape[0]).astype(x.dtype)
+    y = dequant_bias_ref(y_int, sx, sw, bias, out_dtype=jnp.dtype(x.dtype).name)
+    ops.count_dispatch("dequant_epilogue")
+    return y.reshape(*lead, N)
 
 
 def dense(
@@ -118,14 +188,12 @@ def dense(
     name: str = "dense",
 ) -> jnp.ndarray:
     """Linear layer over a param leaf dict: {'kernel': (K, N) [, 'bias': (N,)]}
-    or its prequantized form {'qkernel', 'qscale'} (see prequantize_tree)."""
+    or its prequantized form {'qkernel', 'qscale'} (see prequantize_tree).
+    The bias rides the fused epilogue — it never costs a separate pass."""
+    bias = params.get("bias")
     if "qkernel" in params:
-        y = _gemm_prequant(x, params, backend, name)
-    else:
-        y = gemm(x, params["kernel"], backend=backend, name=name)
-    if "bias" in params:
-        y = y + params["bias"].astype(y.dtype)
-    return y
+        return _gemm_prequant(x, params, backend, name, bias=bias)
+    return gemm(x, params["kernel"], backend=backend, name=name, bias=bias)
 
 
 def prequantize_tree(params, bits: int):

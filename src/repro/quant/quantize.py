@@ -8,13 +8,22 @@ per-tensor or per-channel scales, absmax or percentile calibration.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 
 from ..core.encoding import int_range
 
-__all__ = ["QuantConfig", "compute_scale", "quantize", "dequantize", "fake_quant"]
+__all__ = [
+    "QuantConfig",
+    "compute_scale",
+    "fused_scales",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+]
 
 
 @dataclass(frozen=True)
@@ -50,7 +59,27 @@ def compute_scale(
         else:
             moved = jnp.moveaxis(absx, axis, 0).reshape(x.shape[axis], -1)
             amax = jnp.quantile(moved, q, axis=1)
-    return jnp.maximum(amax, 1e-8) / hi
+    # multiply by the precomputed reciprocal rather than divide: eager and
+    # jitted (fused_scales) invocations of this function must produce
+    # bit-identical scales, and that only holds when both run the identical
+    # op — jitted `amax / hi` was observed to compile to a reciprocal
+    # multiply (1-ulp different for hi=127/7), so pin the multiply form here
+    return jnp.maximum(amax, 1e-8) * (1.0 / hi)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def fused_scales(
+    x: jnp.ndarray, w: jnp.ndarray, bits: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor activation scale + per-out-channel weight scale, one dispatch.
+
+    The only reduction the fused GEMM pipeline (kernels/tugemm_fused.py)
+    cannot fold into its own pass: a scale must be known before the first
+    block is quantized. Jitting both absmax reductions into one executable
+    keeps the dynamic-quant linear layer at two device dispatches total.
+    Bit-identical to calling ``compute_scale`` twice.
+    """
+    return compute_scale(x, bits), compute_scale(w, bits, axis=1)
 
 
 def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:

@@ -91,6 +91,24 @@ def test_matmul_packed_ragged_k(bits):
     np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.matmul_int_ref(a, w)))
 
 
+@pytest.mark.parametrize("bits", [4, 2])
+def test_matmul_packed_plane_remap_on_packed_row_padding(bits):
+    """Regression for the Kpp != Kp_ path: when packed rows need padding to a
+    block quantum, A's columns must be remapped plane-consistently
+    (ops._pad_planes). K=200 → Kp_=100 (int4) / 50 (int2), both off-quantum."""
+    planes = {4: 2, 2: 4}[bits]
+    M, K, N = 8, 200, 16
+    kp = K // planes
+    from repro.kernels.ops import _block
+
+    assert _block(kp, 128)[1] != kp, "shape no longer exercises the remap path"
+    a = rand_int((M, K), 8)
+    w = rand_int((K, N), bits)
+    packed = ops.pack_weights(w, bits)
+    y = ops.matmul_packed(a, packed, bits=bits, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.matmul_int_ref(a, w)))
+
+
 # ------------------------------------------------------------- temporal
 @pytest.mark.parametrize("w", [2, 4])
 @pytest.mark.parametrize("M,K,N", [(8, 16, 8), (24, 40, 16), (128, 128, 128)])
