@@ -1,6 +1,7 @@
-"""Kernel micro-benchmark: exactness sweep + fused-vs-unfused pipeline A/B.
+"""Kernel micro-benchmark: exactness sweep + fused-vs-unfused pipeline A/B
++ end-to-end quantized-vs-fp32 decode-step A/B.
 
-Two sections:
+Three sections:
 
 1. **Exactness sweep** — for each kernel (int8 GEMM, packed int4/int2 GEMM,
    thermometer-decomposed temporal GEMM, fused pipeline) checks bit-exactness
@@ -10,9 +11,14 @@ Two sections:
 2. **Pipeline A/B** — times the complete dynamic-quant linear layer through
    qlinear.gemm with ``fused=True`` vs ``fused=False`` on the XLA path and
    counts device dispatches for both (DESIGN.md §4's ≥6 → 2 claim, measured).
+3. **E2E decode A/B** — a full continuous-batching decode step on the smoke
+   model: fp32 vs surgered int8/int4 (dynamic + prequant), logits
+   correlation vs fp32, plus the per-step tuGEMM cycle totals and modeled
+   energy from the stats-enabled path (DESIGN.md §6).
 
-Writes ``benchmarks/BENCH_kernels.json`` so the perf trajectory is tracked
-across PRs. Usage: ``PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]``.
+Writes ``benchmarks/BENCH_kernels.json`` and ``benchmarks/BENCH_e2e.json``
+so the perf trajectory is tracked across PRs. Usage:
+``PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]``.
 """
 
 from __future__ import annotations
@@ -31,6 +37,7 @@ from repro.kernels.ref import matmul_int_ref
 from repro.quant import GemmBackend, gemm
 
 _OUT = pathlib.Path(__file__).resolve().parent / "BENCH_kernels.json"
+_OUT_E2E = pathlib.Path(__file__).resolve().parent / "BENCH_e2e.json"
 
 
 def _rand_int8(key, shape, bits=8):
@@ -136,6 +143,78 @@ def bench_fused_pipeline(shapes, out, iters=10):
     print(f"\nfused pipeline: min speedup {worst:.2f}x, max dispatches {dmax}")
 
 
+def bench_e2e(fast: bool, write_json: bool) -> dict:
+    """Quantized-vs-fp32 decode-step A/B on the smoke model (XLA path)."""
+    import dataclasses
+
+    from repro.configs.base import RunConfig, get_config
+    from repro.core.report import slot_energy
+    from repro.models import init, init_caches
+    from repro.quant import apply_surgery, tree_totals
+    from repro.serve import build_decode, build_prefill
+
+    cfg = get_config("qwen3-0.6b_smoke")
+    rc0 = RunConfig(dtype="float32", param_dtype="float32", remat="none")
+    params = init(cfg, rc0, jax.random.PRNGKey(0))
+    B, T, cap = 4, 8, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    nxt = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.asarray(T, jnp.int32)
+    iters = 5 if fast else 20
+
+    variants = {
+        "fp32": rc0,
+        "int8_dynamic": dataclasses.replace(rc0, gemm_backend="int8"),
+        "int4_dynamic": dataclasses.replace(rc0, gemm_backend="int4"),
+        "int4_prequant": dataclasses.replace(
+            rc0, gemm_backend="int4", gemm_mode="prequant"
+        ),
+    }
+    out: dict = {"backend": jax.default_backend(), "fast": fast, "variants": {}}
+    ref_logits = None
+    print(f"\n{'e2e decode step (B=4, smoke model)':<26} {'ms/step':>9} "
+          f"{'corr vs fp32':>13} {'Mcycles':>9} {'energy/step':>12}")
+    for name, rc in variants.items():
+        p = apply_surgery(cfg, rc, params)
+        caches = init_caches(cfg, rc, B, cap)
+        caches, _ = jax.jit(build_prefill(cfg, rc))(p, caches, {"tokens": toks})
+        quant = rc.gemm_backend != "bf16"
+        dec = jax.jit(build_decode(cfg, rc, with_stats=quant))
+        res = dec(p, caches, nxt, pos)
+        jax.block_until_ready(res)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            res = dec(p, caches, nxt, pos)
+        jax.block_until_ready(res)
+        dt = (time.perf_counter() - t0) / iters
+        logits = np.asarray(res[1])
+        if name == "fp32":
+            ref_logits = logits
+            corr = 1.0
+        else:
+            corr = float(np.corrcoef(logits.ravel(), ref_logits.ravel())[0, 1])
+        entry = {"ms_per_step": dt * 1e3, "corr_vs_fp32": corr}
+        if quant:
+            tot = tree_totals(res[2])
+            bits = GemmBackend(rc.gemm_backend).bits
+            _, e_j = slot_energy(bits, "serial", tot["serial_cycles"])
+            entry.update(
+                serial_cycles=tot["serial_cycles"],
+                parallel_cycles=tot["parallel_cycles"],
+                energy_j_16x16_serial=e_j,
+            )
+            extra = f"{tot['serial_cycles']/1e6:>9.2f} {e_j*1e6:>10.2f}uJ"
+        else:
+            extra = f"{'-':>9} {'-':>12}"
+        out["variants"][name] = entry
+        print(f"{name:<26} {dt*1e3:>9.2f} {corr:>13.4f} {extra}")
+
+    if write_json:
+        _OUT_E2E.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {_OUT_E2E}")
+    return out
+
+
 def run(fast: bool = False, write_json: bool | None = None) -> dict:
     # default: only full-shape runs refresh the committed BENCH_kernels.json —
     # a --fast run must never silently clobber the perf-trajectory baseline
@@ -156,6 +235,7 @@ def run(fast: bool = False, write_json: bool | None = None) -> dict:
     if write_json:
         _OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
         print(f"wrote {_OUT}")
+    out["e2e"] = bench_e2e(fast, write_json)
     return out
 
 

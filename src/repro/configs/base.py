@@ -119,6 +119,10 @@ class RunConfig:
     gemm_backend: str = "bf16"       # bf16 | int8 | int4 | int2 (quant.qlinear)
     gemm_mode: str = "dynamic"       # dynamic | prequant
     collect_gemm_stats: bool = False
+    # per-layer opt-in for the quant path (quant.surgery): fnmatch patterns
+    # over GEMM names ("attn.*", "mlp.down", "lm_head", ...). Empty tuple =
+    # every GEMM routes through the quant backend (previous behavior).
+    quant_layers: tuple = ()
     remat: str = "block"             # none | block | full
     scan_layers: bool = True
     attn_chunk: int = 1024           # blockwise-attention KV chunk

@@ -23,6 +23,7 @@ from .latency import (
     worst_case_cycles,
 )
 from .ppa import TABLE1, UGEMM_BASELINE, PPAModel, PPAReport, evaluate_ppa, ppa_model
+from .report import EnergyReport, LayerEnergy, energy_report, slot_energy, ugemm_comparison
 from .tiling import GemmTask, PlanReport, TileConfig, plan_gemm, plan_workload
 from .tugemm import TuGemmStats, step_cycles, tugemm, validate_range
 from .ugemm_baseline import stochastic_stream, ugemm_stochastic
@@ -43,6 +44,11 @@ __all__ = [
     "PPAReport",
     "evaluate_ppa",
     "ppa_model",
+    "EnergyReport",
+    "LayerEnergy",
+    "energy_report",
+    "slot_energy",
+    "ugemm_comparison",
     "GemmTask",
     "PlanReport",
     "TileConfig",

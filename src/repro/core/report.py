@@ -1,0 +1,167 @@
+"""Per-layer tuGEMM statistics → §IV PPA / energy report.
+
+Takes the stats tree that ``quant.surgery.forward_with_stats`` threads out
+of a model forward (a pytree of ``quant.capture.CapturedGemm``: one node
+per distinct GEMM, stats stacked along scan-layers / MoE-experts axes) and
+multiplies the measured serial/parallel cycle counts against the analytic
+PPA model calibrated to the paper's Table I (``core.ppa``):
+
+- every GEMM instance is charged on a unit sized to its own (M, N, P) via
+  ``evaluate_ppa`` (the documented ``S_eff = sqrt(M·P)`` generalization of
+  the square calibration points) — "how much would hardware shaped like
+  this layer cost";
+- leading stack axes are *sequentially executed* instances, so cycles sum
+  over them for both variants (distinct GEMMs time-multiplex one unit even
+  in the parallel micro-architecture — parallelism in the paper is across
+  the N outer-product steps *within* one GEMM);
+- the report also restates the workload on the paper's fixed 16×16
+  evaluation unit (``unit_*`` fields; same cycle totals, Table-I-row
+  power) and carries the uGEMM baseline comparison from Table I.
+
+Host-side: call on a concrete (executed) stats tree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .ppa import UGEMM_BASELINE, evaluate_ppa, ppa_model
+
+__all__ = [
+    "LayerEnergy",
+    "EnergyReport",
+    "energy_report",
+    "ugemm_comparison",
+    "slot_energy",
+]
+
+
+@dataclass(frozen=True)
+class LayerEnergy:
+    """One captured GEMM's measured cycles, mapped to PPA."""
+
+    label: str            # tree path, e.g. "groups/0/k0/attn.q"
+    M: int
+    K: int                # contraction dim (the paper's N)
+    N: int                # output dim (the paper's P)
+    instances: int        # sequential GEMM executions (layers × experts ...)
+    serial_cycles: int
+    parallel_cycles: int
+    max_abs: int          # Fig 5 statistic, max over instances
+    area_mm2: float       # unit sized to this GEMM, chosen variant
+    power_w: float
+    latency_s: float      # cycles / achievable clock at this bitwidth
+    energy_j: float
+
+    @property
+    def macs(self) -> int:
+        return self.M * self.K * self.N * self.instances
+
+
+def ugemm_comparison(bits: int, variant: str) -> dict:
+    """tuGEMM vs the rate-coded uGEMM baseline at the paper's comparison
+    point (16×16 unit; uGEMM numbers are its 8-bit Table I row)."""
+    m = ppa_model(variant)
+    area = m.area_mm2(bits, 16, 16, 16)
+    power = m.power_w(bits, 16, 16, 16)
+    return {
+        "tugemm_area_mm2": area,
+        "tugemm_power_w": power,
+        "ugemm_area_mm2": UGEMM_BASELINE["area_mm2"],
+        "ugemm_power_w": UGEMM_BASELINE["power_w"],
+        "area_ratio": UGEMM_BASELINE["area_mm2"] / area,
+        "power_ratio": UGEMM_BASELINE["power_w"] / power,
+    }
+
+
+@dataclass
+class EnergyReport:
+    bits: int
+    variant: str                      # serial | parallel
+    layers: list[LayerEnergy] = field(default_factory=list)
+    total_cycles: int = 0
+    total_macs: int = 0
+    total_latency_s: float = 0.0      # time-multiplexed: sum over GEMMs
+    total_energy_j: float = 0.0
+    # the same workload on the paper's fixed 16×16 evaluation unit
+    unit_power_w: float = 0.0
+    unit_latency_s: float = 0.0
+    unit_energy_j: float = 0.0
+    baseline: dict = field(default_factory=dict)
+
+    def render(self, top: int = 12) -> str:
+        hdr = (
+            f"tuGEMM energy report — {self.bits}-bit {self.variant} "
+            f"({len(self.layers)} GEMMs, {self.total_macs/1e6:.2f} MMACs)"
+        )
+        lines = [hdr, f"{'layer':<36} {'MxKxN':>16} {'inst':>5} "
+                      f"{'cycles':>12} {'energy':>10} {'share':>6}"]
+        tot = max(self.total_energy_j, 1e-30)
+        for le in sorted(self.layers, key=lambda l: -l.energy_j)[:top]:
+            cyc = le.serial_cycles if self.variant == "serial" else le.parallel_cycles
+            lines.append(
+                f"{le.label:<36} {f'{le.M}x{le.K}x{le.N}':>16} {le.instances:>5} "
+                f"{cyc:>12} {le.energy_j*1e6:>8.2f}uJ {100*le.energy_j/tot:>5.1f}%"
+            )
+        lines.append(
+            f"total: {self.total_cycles} cycles, {self.total_latency_s*1e3:.3f} ms, "
+            f"{self.total_energy_j*1e6:.2f} uJ "
+            f"(16x16 unit: {self.unit_latency_s*1e3:.3f} ms, "
+            f"{self.unit_energy_j*1e6:.2f} uJ)"
+        )
+        if self.baseline:
+            b = self.baseline
+            lines.append(
+                f"vs uGEMM 16x16: {b['area_ratio']:.1f}x less area, "
+                f"{b['power_ratio']:.1f}x less power at w={self.bits}"
+            )
+        return "\n".join(lines)
+
+
+def _cycles(stats_field) -> int:
+    return int(np.asarray(stats_field, dtype=np.int64).sum())
+
+
+def energy_report(tree, *, bits: int, variant: str = "serial") -> EnergyReport:
+    """Roll a stats tree up into the per-request PPA/energy report."""
+    from ..quant.capture import tree_entries  # local: core must not need quant
+
+    if variant not in ("serial", "parallel"):
+        raise ValueError(f"unknown tuGEMM variant {variant!r}")
+    model = ppa_model(variant)
+    clk = model.clock_hz(bits)
+    rep = EnergyReport(bits=bits, variant=variant,
+                       baseline=ugemm_comparison(bits, variant))
+    unit16 = ppa_model(variant).power_w(bits, 16, 16, 16)
+    for label, e in tree_entries(tree):
+        ser = _cycles(e.stats.serial_cycles)
+        par = _cycles(e.stats.parallel_cycles)
+        cyc = ser if variant == "serial" else par
+        inst = int(np.asarray(e.stats.serial_cycles).size)
+        unit = evaluate_ppa(variant, bits, e.M, e.K, e.N, cyc)
+        rep.layers.append(LayerEnergy(
+            label=label, M=e.M, K=e.K, N=e.N, instances=inst,
+            serial_cycles=ser, parallel_cycles=par,
+            max_abs=int(np.asarray(e.stats.max_abs, dtype=np.int64).max()),
+            area_mm2=unit.area_mm2, power_w=unit.power_w,
+            latency_s=unit.latency_s, energy_j=unit.energy_j,
+        ))
+        rep.total_cycles += cyc
+        rep.total_macs += rep.layers[-1].macs
+        rep.total_latency_s += unit.latency_s
+        rep.total_energy_j += unit.energy_j
+    rep.unit_power_w = unit16
+    rep.unit_latency_s = rep.total_cycles / clk
+    rep.unit_energy_j = unit16 * rep.unit_latency_s
+    return rep
+
+
+def slot_energy(bits: int, variant: str, cycles: int) -> tuple[float, float]:
+    """(latency_s, energy_j) for ``cycles`` on the paper's 16×16 evaluation
+    unit — the per-slot accounting model in serve.engine (one shared unit,
+    time-multiplexed across requests)."""
+    m = ppa_model(variant)
+    lat = cycles / m.clock_hz(bits)
+    return lat, m.power_w(bits, 16, 16, 16) * lat

@@ -12,6 +12,14 @@ this tool.
 
     PYTHONPATH=src python -m repro.launch.probe --arch qwen3-8b --shape decode_32k \
         --set kv_cache_dtype=int8 --rule embed=None
+
+``--energy`` runs the quantized-inference energy cell instead: surger the
+model onto the fused tuGEMM path, execute one forward with per-layer stats
+capture, and print the cycles→PPA energy report (core.report / DESIGN.md
+§6). Use a ``*_smoke`` arch — this path executes, it does not just lower.
+
+    PYTHONPATH=src python -m repro.launch.probe --arch qwen3-0.6b_smoke --energy \
+        --set gemm_backend=int4 --variant parallel --seq 16
 """
 
 import argparse
@@ -22,7 +30,7 @@ import time
 
 import jax
 
-from ..configs.base import SHAPES, get_config
+from ..configs.base import SHAPES, RunConfig, get_config
 from ..models import model_flops
 from ..parallel.sharding import use_mesh
 from ..roofline import analyze
@@ -138,16 +146,62 @@ def probe(arch, shape_name, sets=(), rules=(), multi_pod=False, dump=None, label
     return rep
 
 
+def energy_probe(arch, sets=(), variant="serial", batch=2, seq=8, label="energy"):
+    """Execute one surgered quantized forward and print the per-layer
+    cycles→energy report. Returns the EnergyReport."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from ..core.report import energy_report
+    from ..models import init
+    from ..quant import apply_surgery, forward_with_stats
+    from ..quant.qlinear import GemmBackend
+
+    cfg = get_config(arch)
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
+                   gemm_backend="int8")
+    kw = {}
+    for s in sets:
+        k, v = s.split("=", 1)
+        kw[k] = _coerce(v)
+    rc = dc.replace(rc, **kw)
+    if rc.gemm_backend == "bf16":
+        raise SystemExit("--energy needs a quant backend: --set gemm_backend=int8|int4|int2")
+
+    t0 = time.time()
+    params = init(cfg, rc, jax.random.PRNGKey(0))
+    params = apply_surgery(cfg, rc, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0, cfg.vocab_size)
+    h, _, _, tree = forward_with_stats(cfg, rc, params, {"tokens": toks})
+    h.block_until_ready()
+    rep = energy_report(tree, bits=GemmBackend(rc.gemm_backend).bits, variant=variant)
+    print(f"\n=== {label}: {arch} ({batch}x{seq} tokens, {rc.gemm_backend} "
+          f"{rc.gemm_mode}, ran in {time.time()-t0:.1f}s)")
+    print(rep.render())
+    return rep
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--shape", default=None)
     ap.add_argument("--set", action="append", default=[], help="RunConfig field=value")
     ap.add_argument("--rule", action="append", default=[], help="sharding rule logical=mesh_axis")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dump", default=None, help="write optimized HLO to file")
     ap.add_argument("--label", default="probe")
+    ap.add_argument("--energy", action="store_true",
+                    help="run the quantized-inference energy cell (executes a forward)")
+    ap.add_argument("--variant", default="serial", choices=["serial", "parallel"])
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=8)
     args = ap.parse_args()
+    if args.energy:
+        energy_probe(args.arch, args.set, args.variant, args.batch, args.seq, args.label)
+        return
+    if args.shape is None:
+        ap.error("--shape is required (unless --energy)")
     probe(args.arch, args.shape, args.set, args.rule, args.multi_pod, args.dump, args.label)
 
 

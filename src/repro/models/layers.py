@@ -117,6 +117,8 @@ def _sp_mlp_applicable(ctx, x: jnp.ndarray, p: dict, backend: GemmBackend) -> bo
     weights ff-shardable, bf16 compute (quant backends keep the GSPMD path)."""
     if ctx is None or backend.kind != "bf16" or "w_gate" not in p:
         return False
+    if "kernel" not in p["w_gate"]:   # surgered prequant leaf — not this path
+        return False
     if ctx.rules.get("seq") != "model" or x.ndim != 3:
         return False
     model = ctx.mesh.shape.get("model", 1)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParamSpec, constrain
+from ..quant import capture as stats_capture
 from ..quant.qlinear import GemmBackend, dense
 from .layers import linear_spec, mlp, mlp_spec
 
@@ -77,6 +78,33 @@ def _dispatch_group(xg: jnp.ndarray, idx: jnp.ndarray, E: int, cap: int):
     xpad = jnp.concatenate([x_rep, jnp.zeros((1, xg.shape[-1]), xg.dtype)], 0)
     xin = xpad[jnp.minimum(inv, gs * k)]                           # empty slot -> 0
     return xin, dest
+
+
+def _expert_mm(w, xs: jnp.ndarray, backend: GemmBackend, name: str) -> jnp.ndarray:
+    """Batched expert GEMM: vmap ``dense`` over the experts axis.
+
+    ``w`` is either a raw stacked kernel (E, K, N) or its surgered prequant
+    form {"qkernel": (E, Kp, N), "qscale": (E, N)} (quant.surgery packs the
+    expert planes offline like any other linear leaf).
+
+    Stats capture cannot cross the vmap boundary by side channel (the pushed
+    values would be escaped batch tracers), so under an active capture the
+    per-expert TuGemmStats are *returned* through the vmap
+    (``return_stats=True`` suppresses the in-``dense`` push) and re-pushed
+    here with a leading (E,) experts axis — E sequential GEMMs on the unit.
+    """
+    wrap = (lambda wi: wi) if isinstance(w, dict) else (lambda wi: {"kernel": wi})
+    cap = stats_capture.capturing()
+    fn = lambda wi, xi: dense(wrap(wi), xi, backend=backend, name=name,
+                              return_stats=cap)
+    out = jax.vmap(fn)(w, xs)
+    if not cap:
+        return out
+    y, st = out
+    if st is not None:
+        N = w["qscale"].shape[-1] if isinstance(w, dict) else w.shape[-1]
+        stats_capture.push(name, xs.shape[1], xs.shape[-1], N, st)
+    return y
 
 
 def moe_ffn(
@@ -131,17 +159,11 @@ def moe_ffn(
     xin = xin.reshape(G, E, cap, D).transpose(1, 0, 2, 3).reshape(E, G * cap, D)
     xin = constrain(xin, "experts", "group_data", None)
 
-    g = jax.vmap(lambda wi, xi: dense({"kernel": wi}, xi, backend=backend, name="moe.gate"))(
-        p["experts"]["w_gate"], xin
-    )
-    u = jax.vmap(lambda wi, xi: dense({"kernel": wi}, xi, backend=backend, name="moe.up"))(
-        p["experts"]["w_up"], xin
-    )
+    g = _expert_mm(p["experts"]["w_gate"], xin, backend, "moe.gate")
+    u = _expert_mm(p["experts"]["w_up"], xin, backend, "moe.up")
     h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
     h = constrain(h, "experts", "group_data", None)
-    yout = jax.vmap(lambda wi, xi: dense({"kernel": wi}, xi, backend=backend, name="moe.down"))(
-        p["experts"]["w_down"], h
-    )                                                                # (E, B*cap, D)
+    yout = _expert_mm(p["experts"]["w_down"], h, backend, "moe.down")  # (E, B*cap, D)
 
     # reshard back: experts -> groups
     yg = yout.reshape(E, G, cap, D).transpose(1, 0, 2, 3).reshape(G, E * cap, D)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunConfig
 from ..parallel.sharding import ParamSpec, constrain
+from ..quant import capture as stats_capture
 from ..quant.qlinear import GemmBackend, dense
 from .attention import gqa_attention, gqa_spec, init_kv_cache, mla_attention, mla_spec
 from .layers import embed_lookup, embed_spec, linear_spec, mlp, mlp_spec, rms_norm, rms_norm_spec
@@ -140,7 +141,10 @@ def model_spec(cfg: ModelConfig) -> dict:
 
 
 def backend_from(rc: RunConfig) -> GemmBackend:
-    return GemmBackend(rc.gemm_backend, rc.gemm_mode, rc.collect_gemm_stats)
+    return GemmBackend(
+        rc.gemm_backend, rc.gemm_mode, rc.collect_gemm_stats,
+        layers=tuple(rc.quant_layers),
+    )
 
 
 # -------------------------------------------------------------------- cache
@@ -169,6 +173,36 @@ def init_caches(cfg: ModelConfig, rc: RunConfig, batch: int, capacity: int):
 
 # ------------------------------------------------------------------- blocks
 def _apply_block(
+    cfg: ModelConfig,
+    kind: LayerKind,
+    p: dict,
+    x: jnp.ndarray,
+    positions,
+    *,
+    backend: GemmBackend,
+    cache: dict | None,
+    cache_pos,
+    chunk: int,
+    want_state: bool,
+):
+    """One block. Returns (x, new_cache|None, aux, stats|None) — stats is the
+    block's drained capture frame ({gemm name: CapturedGemm}) when a stats
+    capture is active, so the per-layer tuGEMM cycle counts travel through
+    jax.checkpoint / lax.scan as ordinary traced outputs."""
+    if stats_capture.capturing():
+        with stats_capture.frame() as fr:
+            x, new_cache, aux, _ = _apply_block_inner(
+                cfg, kind, p, x, positions, backend=backend, cache=cache,
+                cache_pos=cache_pos, chunk=chunk, want_state=want_state,
+            )
+        return x, new_cache, aux, stats_capture.as_tree(fr)
+    return _apply_block_inner(
+        cfg, kind, p, x, positions, backend=backend, cache=cache,
+        cache_pos=cache_pos, chunk=chunk, want_state=want_state,
+    )
+
+
+def _apply_block_inner(
     cfg: ModelConfig,
     kind: LayerKind,
     p: dict,
@@ -235,7 +269,7 @@ def _apply_block(
             y2 = mlp(p["ffn"], h2, cfg.mlp_type, backend=backend)
         x = x + constrain(y2, "batch", "seq", "act_embed")
 
-    return x, (new_cache or None), aux
+    return x, (new_cache or None), aux, None
 
 
 # ------------------------------------------------------------------ forward
@@ -275,23 +309,27 @@ def forward(
     want_state = caches is not None
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
+    stats_groups = []  # per-group stats trees, stacked along the layers axis
 
     def superblock(kinds, x, p, cache):
         # residual stream layout anchor (seq-sharded under SP overrides)
         x = constrain(x, "batch", "seq", "act_embed")
         aux = jnp.zeros((), jnp.float32)
         ncache = {}
+        sdict = {}
         for j, kind in enumerate(kinds):
             c_j = cache[f"k{j}"] if cache is not None else None
-            x, nc, a = _apply_block(
+            x, nc, a, bs = _apply_block(
                 cfg, kind, p[f"k{j}"], x, positions,
                 backend=backend, cache=c_j, cache_pos=cache_pos,
                 chunk=rc.attn_chunk, want_state=want_state,
             )
             if nc is not None:
                 ncache[f"k{j}"] = nc
+            if bs is not None:
+                sdict[f"k{j}"] = bs
             aux = aux + a
-        return x, (ncache or None), aux
+        return x, (ncache or None), aux, (sdict or None)
 
     for gi, g in enumerate(groups):
         gp = params["groups"][gi]
@@ -313,27 +351,37 @@ def forward(
                     p_slice, c_slice = xs
                 else:
                     p_slice, c_slice = xs, None
-                x, nc, a = one_layer(x, p_slice, c_slice)
-                return (x, aux + a), nc
+                x, nc, a, st = one_layer(x, p_slice, c_slice)
+                return (x, aux + a), (nc, st)
 
             xs = (gp, gc) if gc is not None else gp
-            (x, aux_total), nc = jax.lax.scan(step, (x, aux_total), xs)
+            (x, aux_total), (nc, st) = jax.lax.scan(step, (x, aux_total), xs)
             new_caches.append(nc)
+            stats_groups.append(st)
         else:
-            ncs = []
+            ncs, sts = [], []
             for i in range(g.repeats):
                 p_slice = jax.tree.map(lambda a, i=i: a[i], gp)
                 c_slice = jax.tree.map(lambda a, i=i: a[i], gc) if gc is not None else None
-                x, nc, a = one_layer(x, p_slice, c_slice)
+                x, nc, a, st = one_layer(x, p_slice, c_slice)
                 aux_total = aux_total + a
                 ncs.append(nc)
+                sts.append(st)
             if ncs and ncs[0] is not None:
                 new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
             else:
                 new_caches.append(None)
+            if sts and sts[0] is not None:
+                stats_groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *sts))
+            else:
+                stats_groups.append(None)
 
     x = rms_norm(params["final_norm"], x, cfg.rms_eps)
     x = constrain(x, "batch", "seq", "act_embed")
+    if stats_capture.capturing():
+        # stats arrays carry a leading (repeats,) layers axis per group; the
+        # frontend/LM-head GEMMs drain from the capture's root frame directly
+        stats_capture.deposit("groups", tuple(stats_groups))
     return x, (tuple(new_caches) if caches is not None else None), aux_total
 
 

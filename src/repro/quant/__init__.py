@@ -1,8 +1,11 @@
-"""Low-precision substrate: PTQ, GEMM backend registry, workload statistics."""
+"""Low-precision substrate: PTQ, GEMM backend registry, workload statistics,
+model surgery onto the fused tuGEMM serving path."""
 
+from .capture import CapturedGemm, capture_stats, tree_entries, tree_totals
 from .qlinear import BF16, GemmBackend, dense, gemm, prequantize_tree
 from .quantize import QuantConfig, compute_scale, dequantize, fake_quant, quantize
 from .stats import StatsCollector, active_collector, collecting
+from .surgery import SurgeryPlan, apply_surgery, forward_with_stats, plan_surgery
 
 __all__ = [
     "BF16",
@@ -18,4 +21,12 @@ __all__ = [
     "StatsCollector",
     "active_collector",
     "collecting",
+    "CapturedGemm",
+    "capture_stats",
+    "tree_entries",
+    "tree_totals",
+    "SurgeryPlan",
+    "apply_surgery",
+    "forward_with_stats",
+    "plan_surgery",
 ]

@@ -1,0 +1,188 @@
+"""Trace-time functional capture of per-GEMM tuGEMM statistics.
+
+``quant.stats`` escapes values from jit via ``jax.debug.callback`` — a host
+side-channel, fine for offline profiling but invisible to the program: the
+cycle counts cannot be returned from a jitted step function, jit-cached,
+sharded, or aggregated on device. This module is the *functional*
+alternative that the model-surgery pass (``quant.surgery``) builds on:
+
+- while a :func:`capture` context is active, ``qlinear`` pushes every
+  quantized GEMM's :class:`~repro.core.tugemm.TuGemmStats` (traced arrays)
+  plus its (M, K, N) shape into the innermost *frame*;
+- structured-control-flow boundaries thread the values across their scope:
+  ``models.transformer`` opens a :func:`frame` per block, drains it, and
+  returns the block's stats through ``jax.checkpoint`` / ``lax.scan`` as
+  ordinary outputs (stacked along the layers axis); ``models.moe`` passes
+  expert stats through ``vmap`` via ``dense(..., return_stats=True)`` and
+  re-pushes them outside with a leading experts axis;
+- at the end, the capture's ``tree`` is a pytree of :class:`CapturedGemm`
+  nodes — a legal jit output, so a stats-enabled step function compiles
+  once and returns fresh stats on every call (including jit cache hits,
+  when none of this Python machinery runs at all).
+
+All state here is consulted at *trace time only* and is intentionally
+simple (module-global, not thread-safe): open one capture per trace.
+Gradient re-tracing through ``jax.checkpoint`` would replay pushes, so
+capture is an inference/profiling feature — ``surgery.forward_with_stats``
+pins ``remat="none"``.
+
+Leading axes on the stats arrays mean "sequentially executed GEMM
+instances" (stacked scan layers, MoE experts): aggregation sums
+``serial_cycles`` *and* ``parallel_cycles`` over them — distinct GEMMs
+time-multiplex one unit even in the parallel micro-architecture.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from ..core.tugemm import TuGemmStats
+
+__all__ = [
+    "CapturedGemm",
+    "Capture",
+    "capture_stats",
+    "capturing",
+    "push",
+    "frame",
+    "as_tree",
+    "deposit",
+]
+
+
+@dataclass
+class CapturedGemm:
+    """One quantized GEMM's shape + data-dependent hardware statistics.
+
+    ``stats`` arrays may carry leading axes (layers, experts) — each slice is
+    one executed GEMM instance of shape (M, K) @ (K, N)."""
+
+    name: str
+    M: int
+    K: int
+    N: int
+    stats: TuGemmStats
+
+    def tree_flatten(self):
+        return (self.stats,), (self.name, self.M, self.K, self.N)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], aux[1], aux[2], aux[3], children[0])
+
+
+jax.tree_util.register_pytree_node(
+    CapturedGemm, CapturedGemm.tree_flatten, CapturedGemm.tree_unflatten
+)
+
+
+class Capture:
+    """Active capture: a frame stack (trace-time) + the assembled tree."""
+
+    def __init__(self) -> None:
+        self.frames: list[list[CapturedGemm]] = [[]]
+        self.tree: dict = {}
+
+
+_ACTIVE: list[Capture] = []
+
+
+def capturing() -> bool:
+    return bool(_ACTIVE)
+
+
+def push(name: str, M: int, K: int, N: int, stats: TuGemmStats) -> None:
+    """Record one GEMM in the innermost frame (no-op when not capturing)."""
+    if _ACTIVE:
+        _ACTIVE[-1].frames[-1].append(CapturedGemm(name, int(M), int(K), int(N), stats))
+
+
+@contextmanager
+def frame():
+    """A nested frame: pushes inside land here, not in the parent. The body
+    must drain the yielded list (via :func:`as_tree`) and carry the result
+    across its control-flow boundary itself."""
+    cap = _ACTIVE[-1]
+    fr: list[CapturedGemm] = []
+    cap.frames.append(fr)
+    try:
+        yield fr
+    finally:
+        cap.frames.pop()
+
+
+def as_tree(entries: list[CapturedGemm]) -> dict[str, CapturedGemm]:
+    """Frame contents → {gemm name: CapturedGemm}; duplicate names (the same
+    layer called twice in one block) get a ``#i`` suffix."""
+    out: dict[str, CapturedGemm] = {}
+    for e in entries:
+        key, i = e.name, 2
+        while key in out:
+            key, i = f"{e.name}#{i}", i + 1
+        out[key] = e
+    return out
+
+
+def deposit(key: str, subtree) -> None:
+    """Attach an assembled subtree (e.g. a model's scan groups) to the
+    capture's result tree."""
+    if not _ACTIVE:
+        return
+    tree = _ACTIVE[-1].tree
+    k, i = key, 2
+    while k in tree:
+        k, i = f"{key}#{i}", i + 1
+    tree[k] = subtree
+
+
+@contextmanager
+def capture_stats():
+    """Enable stats capture; yields the :class:`Capture` whose ``.tree``
+    holds the result after the block exits. Top-level GEMMs (embedding
+    frontend, LM head) drain from the root frame into the tree by name."""
+    cap = Capture()
+    _ACTIVE.append(cap)
+    try:
+        yield cap
+    finally:
+        _ACTIVE.pop()
+        for name, e in as_tree(cap.frames[0]).items():
+            k, i = name, 2
+            while k in cap.tree:
+                k, i = f"{name}#{i}", i + 1
+            cap.tree[k] = e
+
+
+def tree_entries(tree, prefix: str = "") -> list[tuple[str, CapturedGemm]]:
+    """Flatten a stats tree into labelled CapturedGemm entries."""
+    out: list[tuple[str, CapturedGemm]] = []
+    if tree is None:
+        return out
+    if isinstance(tree, CapturedGemm):
+        return [(prefix or tree.name, tree)]
+    if isinstance(tree, dict):
+        items = tree.items()
+    elif isinstance(tree, (list, tuple)):
+        items = enumerate(tree)
+    else:  # unexpected leaf — ignore
+        return out
+    for k, v in items:
+        label = f"{prefix}/{k}" if prefix else str(k)
+        out.extend(tree_entries(v, label))
+    return out
+
+
+def tree_totals(tree) -> dict[str, int]:
+    """Sum serial/parallel cycle counts over every captured GEMM instance
+    (leading axes = sequential instances ⇒ summed for both variants).
+    Host-side: call on a *concrete* (already executed) stats tree — the
+    accumulation runs in int64 numpy so deep models cannot wrap int32."""
+    serial = parallel = 0
+    for _, e in tree_entries(tree):
+        serial += int(np.asarray(e.stats.serial_cycles, dtype=np.int64).sum())
+        parallel += int(np.asarray(e.stats.parallel_cycles, dtype=np.int64).sum())
+    return {"serial_cycles": serial, "parallel_cycles": parallel}

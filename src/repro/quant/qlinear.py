@@ -27,12 +27,14 @@ and is what benchmarks/kernel_bench.py A/Bs against.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from fnmatch import fnmatchcase
 
 import jax.numpy as jnp
 
 from ..core.encoding import int_range
 from ..kernels import ops
 from ..kernels.ref import dequant_bias_ref
+from . import capture
 from .quantize import compute_scale, fused_scales, quantize
 from .stats import record_stats
 
@@ -46,6 +48,9 @@ class GemmBackend:
     collect_stats: bool = False   # emit tuGEMM cycle stats per GEMM
     impl: str = "auto"            # kernel dispatch (kernels/ops.py)
     fused: bool = True            # one-pass pipeline (False = legacy unfused)
+    # per-layer opt-in (quant.surgery): fnmatch patterns over GEMM names
+    # ("attn.*", "mlp.down", ...). Empty = every GEMM uses the quant path.
+    layers: tuple[str, ...] = ()
 
     @property
     def bits(self) -> int:
@@ -53,6 +58,12 @@ class GemmBackend:
 
     def with_stats(self, on: bool = True) -> "GemmBackend":
         return replace(self, collect_stats=on)
+
+    def selects(self, name: str) -> bool:
+        """Does the quant path apply to the GEMM called ``name``?"""
+        if self.kind == "bf16":
+            return False
+        return not self.layers or any(fnmatchcase(name, p) for p in self.layers)
 
 
 BF16 = GemmBackend("bf16")
@@ -63,23 +74,49 @@ def _flatten(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
     return x.reshape(-1, x.shape[-1]), lead
 
 
+def _want_stats(backend: GemmBackend, return_stats: bool) -> bool:
+    """Stats come out of the pass when anyone wants them: the debug-callback
+    collector (backend.collect_stats), the functional caller (return_stats),
+    or an active capture (quant.capture / surgery stats tree)."""
+    return backend.collect_stats or return_stats or capture.capturing()
+
+
+def _sink_stats(stats, x2, N, backend: GemmBackend, name: str, return_stats: bool):
+    """Route one GEMM's stats to the collector and/or the capture frame.
+    ``return_stats=True`` suppresses the capture push — the caller owns the
+    values and re-pushes them after crossing its control-flow boundary
+    (models.moe does this for the vmapped expert GEMMs)."""
+    if backend.collect_stats:
+        record_stats(
+            name, x2.shape[0], x2.shape[1], N,
+            stats.act_max, stats.serial_cycles, stats.parallel_cycles,
+        )
+    if not return_stats:
+        capture.push(name, x2.shape[0], x2.shape[1], N, stats)
+
+
 def _emit_fused(
-    x2, w, sx, sw, bias, backend: GemmBackend, name: str, *, w_quantized: bool
+    x2, w, sx, sw, bias, backend: GemmBackend, name: str, *,
+    w_quantized: bool, return_stats: bool = False,
 ):
-    """Single fused dispatch + stats recording; returns the 2-D result."""
+    """Single fused dispatch + stats routing; returns (y 2-D, stats|None)."""
+    want = _want_stats(backend, return_stats)
     out = ops.matmul_fused(
         x2, w, sx=sx, sw=sw, bias=bias,
         bits=backend.bits, w_quantized=w_quantized,
-        collect_stats=backend.collect_stats, impl=backend.impl,
+        collect_stats=want, impl=backend.impl,
     )
-    if not backend.collect_stats:
-        return out
+    if not want:
+        return out, None
     y, stats = out
-    N = sw.reshape(-1).shape[0]
-    record_stats(
-        name, x2.shape[0], x2.shape[1], N,
-        stats.act_max, stats.serial_cycles, stats.parallel_cycles,
-    )
+    _sink_stats(stats, x2, sw.reshape(-1).shape[0], backend, name, return_stats)
+    return y, stats
+
+
+def _bf16_gemm(x, w, bias):
+    y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
     return y
 
 
@@ -90,13 +127,15 @@ def gemm(
     backend: GemmBackend = BF16,
     name: str = "gemm",
     bias: jnp.ndarray | None = None,
-) -> jnp.ndarray:
-    """x (..., K) · w (K, N) [+ bias (N,)] → (..., N), in x.dtype."""
-    if backend.kind == "bf16":
-        y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
-        if bias is not None:
-            y = y + bias.astype(y.dtype)
-        return y
+    return_stats: bool = False,
+):
+    """x (..., K) · w (K, N) [+ bias (N,)] → (..., N), in x.dtype.
+
+    ``return_stats=True`` returns ``(y, TuGemmStats | None)`` instead — the
+    functional form (None on the bf16 path, which runs no tuGEMM hardware)."""
+    if not backend.selects(name):
+        y = _bf16_gemm(x, w, bias)
+        return (y, None) if return_stats else y
 
     bits = backend.bits
     x2, lead = _flatten(x)
@@ -120,8 +159,12 @@ def gemm(
         ops.count_dispatch("scale_w")
 
     if backend.fused:
-        y = _emit_fused(x2, w, sx, sw, bias, backend, name, w_quantized=False)
-        return y.reshape(*lead, w.shape[1])
+        y, stats = _emit_fused(
+            x2, w, sx, sw, bias, backend, name,
+            w_quantized=False, return_stats=return_stats,
+        )
+        y = y.reshape(*lead, w.shape[1])
+        return (y, stats) if return_stats else y
 
     # ------------------------------------------------ legacy unfused pipeline
     xq = quantize(x2, sx, bits)
@@ -129,17 +172,16 @@ def gemm(
     ops.count_dispatch("quantize_x")
     ops.count_dispatch("quantize_w")
     y_int = ops.matmul_int8(xq, wq, impl=backend.impl)
-    if backend.collect_stats:
+    stats = None
+    if _want_stats(backend, return_stats):
         stats = ops.unary_step_stats(xq, wq, impl=backend.impl)
         # Fig 5 statistic = feature-map (activation) max; cycle counts use
         # both operands (the hardware's column AND row counters).
-        record_stats(
-            name, x2.shape[0], x2.shape[1], w.shape[1],
-            jnp.abs(xq).max(), stats.serial_cycles, stats.parallel_cycles,
-        )
+        _sink_stats(stats, x2, w.shape[1], backend, name, return_stats)
     y = dequant_bias_ref(y_int, sx, sw, bias, out_dtype=jnp.dtype(x.dtype).name)
     ops.count_dispatch("dequant_epilogue")
-    return y.reshape(*lead, w.shape[1])
+    y = y.reshape(*lead, w.shape[1])
+    return (y, stats) if return_stats else y
 
 
 def _gemm_prequant(
@@ -148,7 +190,8 @@ def _gemm_prequant(
     backend: GemmBackend,
     name: str,
     bias: jnp.ndarray | None = None,
-) -> jnp.ndarray:
+    return_stats: bool = False,
+):
     bits = backend.bits
     x2, lead = _flatten(x)
     sx = compute_scale(x2, bits)
@@ -159,10 +202,12 @@ def _gemm_prequant(
     if backend.fused:
         # fused path: plane decode happens inside the same kernel, and —
         # unlike the legacy path — real cycle stats come out of the pass.
-        y = _emit_fused(
-            x2, leaf["qkernel"], sx, sw, bias, backend, name, w_quantized=True
+        y, stats = _emit_fused(
+            x2, leaf["qkernel"], sx, sw, bias, backend, name,
+            w_quantized=True, return_stats=return_stats,
         )
-        return y.reshape(*lead, N)
+        y = y.reshape(*lead, N)
+        return (y, stats) if return_stats else y
 
     xq = quantize(x2, sx, bits)
     ops.count_dispatch("quantize_x")
@@ -177,7 +222,8 @@ def _gemm_prequant(
                      jnp.abs(xq).max(), jnp.zeros(()), jnp.zeros(()))
     y = dequant_bias_ref(y_int, sx, sw, bias, out_dtype=jnp.dtype(x.dtype).name)
     ops.count_dispatch("dequant_epilogue")
-    return y.reshape(*lead, N)
+    y = y.reshape(*lead, N)
+    return (y, None) if return_stats else y
 
 
 def dense(
@@ -186,14 +232,18 @@ def dense(
     *,
     backend: GemmBackend = BF16,
     name: str = "dense",
-) -> jnp.ndarray:
+    return_stats: bool = False,
+):
     """Linear layer over a param leaf dict: {'kernel': (K, N) [, 'bias': (N,)]}
-    or its prequantized form {'qkernel', 'qscale'} (see prequantize_tree).
-    The bias rides the fused epilogue — it never costs a separate pass."""
+    or its prequantized form {'qkernel', 'qscale'} (see prequantize_tree /
+    quant.surgery). The bias rides the fused epilogue — it never costs a
+    separate pass. ``return_stats=True`` → ``(y, TuGemmStats | None)``."""
     bias = params.get("bias")
     if "qkernel" in params:
-        return _gemm_prequant(x, params, backend, name, bias=bias)
-    return gemm(x, params["kernel"], backend=backend, name=name, bias=bias)
+        return _gemm_prequant(x, params, backend, name, bias=bias,
+                              return_stats=return_stats)
+    return gemm(x, params["kernel"], backend=backend, name=name, bias=bias,
+                return_stats=return_stats)
 
 
 def prequantize_tree(params, bits: int):

@@ -1,0 +1,241 @@
+"""Model surgery: rewrite a float model onto the fused tuGEMM serving path.
+
+The paper's system-level story needs real model layers running through the
+quantized GEMM unit, with the data-dependent cycle counts rolling up into
+§IV's PPA/energy numbers. This module is that integration layer:
+
+- :func:`plan_surgery` resolves every linear leaf in a model's param tree to
+  the GEMM name its ``forward`` uses at runtime ("attn.q", "mlp.down",
+  "moe.gate", "lm_head", ...) and applies the per-layer opt-in from
+  ``RunConfig.quant_layers`` (fnmatch patterns; empty = everything).
+- :func:`apply_surgery` rewrites the param tree for ``gemm_mode="prequant"``:
+  each selected ``{"kernel": (..., K, N)}`` leaf — including kernels stacked
+  along the scan ``layers`` axis and MoE expert stacks ``(L, E, K, N)`` —
+  is replaced by ``{"qkernel", "qscale"}`` with the sub-byte planes packed
+  offline (``kernels.ops.pack_weights`` layout, 2–8× less weight HBM).
+  Dynamic mode needs no param rewrite (quantize-on-load in the fused
+  kernel); the same plan then only drives the runtime name gating.
+- :func:`forward_with_stats` runs the surgered model and returns, alongside
+  the hidden states, the **stats tree**: a pytree of
+  :class:`~repro.quant.capture.CapturedGemm` holding every quantized GEMM's
+  ``TuGemmStats`` (per-step/serial/parallel cycles, max |value|), stacked
+  along the scan layers axis per group. ``core.report`` turns this tree
+  into the per-request energy/latency report; ``serve.engine`` does the
+  per-slot accounting across prefill/decode.
+
+Unselected layers (and the MoE router, norms, embeddings, the paper's
+hardware boundary) keep the bf16 path — qlinear falls back per GEMM name,
+so partial quantization degrades gracefully rather than erroring.
+Surgery coverage gaps in prequant mode likewise degrade to dynamic
+quantization of the float kernel, which is bit-exact with prequant.
+
+Stats capture is an inference/profiling feature: ``forward_with_stats``
+pins ``remat="none"`` (gradient rematerialization would replay the
+capture pushes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from fnmatch import fnmatchcase
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..kernels import ops
+from . import capture
+from .quantize import compute_scale, quantize
+
+__all__ = [
+    "SurgeryEntry",
+    "SurgeryPlan",
+    "plan_surgery",
+    "apply_surgery",
+    "forward_with_stats",
+]
+
+
+# ---------------------------------------------------------------- name table
+# param-tree key -> runtime GEMM name, per enclosing module. Only keys listed
+# here are linear layers executed via qlinear.dense; everything else
+# (norms, 3-D einsum factors like MLA's w_uk/w_uv, embeddings) is outside
+# the tuGEMM hardware boundary and is never rewritten.
+_ATTN = {"wq": "q", "wk": "k", "wv": "v", "wo": "o", "w_dkv": "dkv"}
+_SSM = {"in_proj": "ssm.in_proj", "x_proj": "ssm.x_proj",
+        "dt_w": "ssm.dt", "out_proj": "ssm.out_proj"}
+_MLP = {"w_gate": "gate", "w_up": "up", "w_down": "down"}
+_TOP = {"head": "lm_head", "frontend_proj": "frontend"}
+
+
+def _gemm_name(cfg: ModelConfig, path: tuple[str, ...]) -> str | None:
+    """Runtime GEMM name for the linear leaf at ``path`` (None = not a
+    qlinear-executed linear)."""
+    key = path[-1]
+    if key in _TOP and len(path) == 1:
+        return _TOP[key]
+    if "attn" in path and key in _ATTN:
+        prefix = "mla" if cfg.attn_type == "mla" else "attn"
+        return f"{prefix}.{_ATTN[key]}"
+    if "ssm" in path and key in _SSM:
+        return _SSM[key]
+    if "ffn" in path:
+        if "experts" in path and key in _MLP:
+            return f"moe.{_MLP[key]}"
+        if "shared" in path and key in _MLP:
+            return f"moe.shared.{_MLP[key]}"
+        if key in _MLP:
+            return f"mlp.{_MLP[key]}"
+    return None
+
+
+@dataclass(frozen=True)
+class SurgeryEntry:
+    path: tuple          # keys into the param tree (ints for group tuples)
+    gemm_name: str       # runtime qlinear name
+    selected: bool       # opted in by RunConfig.quant_layers
+    shape: tuple         # kernel shape incl. leading stack axes
+
+
+@dataclass(frozen=True)
+class SurgeryPlan:
+    bits: int
+    mode: str                            # dynamic | prequant
+    entries: tuple[SurgeryEntry, ...]
+
+    @property
+    def selected(self) -> tuple[SurgeryEntry, ...]:
+        return tuple(e for e in self.entries if e.selected)
+
+
+def _selected(rc: RunConfig, name: str, path: tuple) -> bool:
+    pats = tuple(rc.quant_layers)
+    if not pats:
+        return True
+    dotted = ".".join(str(k) for k in path)
+    return any(fnmatchcase(name, p) or fnmatchcase(dotted, p) for p in pats)
+
+
+def _walk(cfg, rc, node, path, visit):
+    """Visit every surgery candidate: {'kernel': ...} leaf-dicts and raw
+    MoE expert kernel stacks. ``visit(path, key, array, name)`` returns a
+    replacement for the *containing* entry or None to keep it."""
+    if isinstance(node, dict):
+        if "kernel" in node and getattr(node["kernel"], "ndim", 0) >= 2:
+            name = _gemm_name(cfg, path)
+            if name is None:
+                return node
+            rep = visit(path, node, name)
+            return node if rep is None else rep
+        out = {}
+        for k, v in node.items():
+            if (
+                path and path[-1] == "experts"
+                and k in _MLP and getattr(v, "ndim", 0) >= 2
+            ):
+                # raw expert kernel stack (E, K, N) / (L, E, K, N)
+                name = _gemm_name(cfg, path + (k,))
+                rep = visit(path + (k,), {"kernel": v}, name)
+                out[k] = v if rep is None else rep
+            else:
+                out[k] = _walk(cfg, rc, v, path + (k,), visit)
+        return out
+    if isinstance(node, (tuple, list)):
+        return type(node)(
+            _walk(cfg, rc, v, path + (i,), visit) for i, v in enumerate(node)
+        )
+    return node
+
+
+def plan_surgery(cfg: ModelConfig, rc: RunConfig, params: dict) -> SurgeryPlan:
+    """Enumerate every linear leaf, its runtime GEMM name, and whether the
+    RunConfig opts it into the quant path."""
+    entries: list[SurgeryEntry] = []
+
+    def visit(path, leaf, name):
+        entries.append(SurgeryEntry(
+            tuple(path), name, _selected(rc, name, path),
+            tuple(leaf["kernel"].shape),
+        ))
+        return None
+
+    _walk(cfg, rc, params, (), visit)
+    from .qlinear import GemmBackend
+
+    bits = GemmBackend(rc.gemm_backend).bits
+    return SurgeryPlan(bits=bits, mode=rc.gemm_mode, entries=tuple(entries))
+
+
+def _prequant_leaf(w: jnp.ndarray, bits: int) -> dict:
+    """Offline PTQ of one kernel, vmapped over any leading stack axes
+    (scan layers, MoE experts): (..., K, N) float →
+    {'qkernel': (..., Kp, N) packed int8, 'qscale': (..., N) f32}."""
+
+    def one(wi):
+        sw = compute_scale(wi, bits, axis=1)
+        wq = quantize(wi, sw.reshape(1, -1), bits)
+        return ops.pack_weights(wq, bits), sw
+
+    lead = w.shape[:-2]
+    if not lead:
+        qk, qs = one(w)
+        return {"qkernel": qk, "qscale": qs}
+    w2 = w.reshape((-1,) + w.shape[-2:])
+    qk, qs = jax.vmap(one)(w2)
+    return {
+        "qkernel": qk.reshape(lead + qk.shape[1:]),
+        "qscale": qs.reshape(lead + qs.shape[1:]),
+    }
+
+
+def apply_surgery(cfg: ModelConfig, rc: RunConfig, params: dict) -> dict:
+    """Rewrite the param tree for the configured quant backend.
+
+    ``gemm_mode="prequant"``: selected kernels are quantized + plane-packed
+    offline (biases ride along; norms/embeddings untouched — the paper's
+    GEMM-only hardware boundary). ``dynamic``: identity — the fused kernel
+    quantizes on load, so only the runtime name gating applies.
+    """
+    if rc.gemm_backend == "bf16" or rc.gemm_mode != "prequant":
+        return params
+    from .qlinear import GemmBackend
+
+    bits = GemmBackend(rc.gemm_backend).bits
+
+    def visit(path, leaf, name):
+        if not _selected(rc, name, path):
+            return None
+        new = _prequant_leaf(leaf["kernel"], bits)
+        if "bias" in leaf:
+            new["bias"] = leaf["bias"]
+        return new
+
+    return _walk(cfg, rc, params, (), visit)
+
+
+def forward_with_stats(
+    cfg: ModelConfig,
+    rc: RunConfig,
+    params: dict,
+    batch: dict,
+    *,
+    caches=None,
+    cache_pos=None,
+):
+    """``models.forward`` + the per-layer tuGEMM stats tree.
+
+    Returns ``(hidden, new_caches, aux_loss, stats_tree)`` where
+    ``stats_tree`` maps ``{"groups": (per-group {kj: {gemm name:
+    CapturedGemm}}, ...), "frontend"?: ...}`` with stats arrays stacked
+    along each group's layers axis. jit-compatible: the tree is an ordinary
+    pytree output of the traced function.
+    """
+    from ..models import forward  # lazy: avoid quant<->models import cycle
+
+    rc = dataclasses.replace(rc, remat="none")
+    with capture.capture_stats() as cap:
+        h, new_caches, aux = forward(
+            cfg, rc, params, batch, caches=caches, cache_pos=cache_pos
+        )
+    return h, new_caches, aux, cap.tree

@@ -1,5 +1,5 @@
 """Serving substrate: prefill/decode step builders + continuous-batching engine."""
 
-from .engine import Engine, Request, build_decode, build_prefill, sample
+from .engine import Engine, Request, SlotMeter, build_decode, build_prefill, sample
 
-__all__ = ["Engine", "Request", "build_decode", "build_prefill", "sample"]
+__all__ = ["Engine", "Request", "SlotMeter", "build_decode", "build_prefill", "sample"]

@@ -11,7 +11,18 @@ The engine layers continuous batching on top: a fixed pool of ``max_batch``
 slots, each slot holding one request's cache rows; finished slots are
 refilled from the admission queue by writing the new request's prefilled
 cache rows into the pool (a batch-axis dynamic_update_slice — no pool-wide
-recompute). KV caches optionally store int8 (``rc.kv_cache_dtype``)."""
+recompute). KV caches optionally store int8 (``rc.kv_cache_dtype``).
+
+With ``track_energy=True`` (quant backends) the step functions are built
+``with_stats``: every quantized GEMM's tuGEMM cycle counts come back from
+the same jitted call as a stats tree (quant.capture), and the engine keeps
+**per-slot meters** across prefill and decode — prefill cycles are charged
+to the admitted request (its prefill runs on a B=1 batch), each decode
+step's pool-wide cycles are split evenly across the active slots (the
+GEMM's M axis is the slot pool; per-row cycle attribution does not exist in
+the hardware, which drains the max over rows — documented approximation).
+``core.report.slot_energy`` maps a meter's cycles onto the paper's 16×16
+evaluation unit for Joules/seconds per request."""
 
 from __future__ import annotations
 
@@ -21,21 +32,40 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunConfig
+from ..core.report import slot_energy
 from ..models import forward, init_caches, lm_logits
+from ..quant import capture as stats_capture
+from ..quant.capture import tree_totals
+from ..quant.qlinear import GemmBackend
 
-__all__ = ["build_prefill", "build_decode", "sample", "Engine", "Request"]
+__all__ = [
+    "build_prefill",
+    "build_decode",
+    "sample",
+    "Engine",
+    "Request",
+    "SlotMeter",
+]
 
 
-def build_prefill(cfg: ModelConfig, rc: RunConfig):
+def build_prefill(cfg: ModelConfig, rc: RunConfig, *, with_stats: bool = False):
     def prefill(params, caches, batch):
         h, caches, _ = forward(cfg, rc, params, batch, caches=caches, cache_pos=0)
         logits = lm_logits(cfg, rc, params, h[:, -1:, :])
         return caches, logits[:, 0, :]
 
-    return prefill
+    if not with_stats:
+        return prefill
+
+    def prefill_stats(params, caches, batch):
+        with stats_capture.capture_stats() as cap:
+            caches, logits = prefill(params, caches, batch)
+        return caches, logits, cap.tree
+
+    return prefill_stats
 
 
-def build_decode(cfg: ModelConfig, rc: RunConfig):
+def build_decode(cfg: ModelConfig, rc: RunConfig, *, with_stats: bool = False):
     def decode(params, caches, tokens, pos):
         batch = {"tokens": tokens}
         if cfg.mrope_sections is not None:
@@ -46,7 +76,15 @@ def build_decode(cfg: ModelConfig, rc: RunConfig):
         logits = lm_logits(cfg, rc, params, h)
         return caches, logits[:, 0, :]
 
-    return decode
+    if not with_stats:
+        return decode
+
+    def decode_stats(params, caches, tokens, pos):
+        with stats_capture.capture_stats() as cap:
+            caches, logits = decode(params, caches, tokens, pos)
+        return caches, logits, cap.tree
+
+    return decode_stats
 
 
 def sample(key, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:
@@ -62,6 +100,39 @@ class Request:
     max_new: int = 32
     out: list[int] = field(default_factory=list)
     done: bool = False
+
+
+@dataclass
+class SlotMeter:
+    """Per-request tuGEMM hardware accounting across prefill + decode."""
+
+    rid: int
+    prompt_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_serial_cycles: int = 0
+    prefill_parallel_cycles: int = 0
+    # decode shares accumulate in float (a step's pool-wide total divided by
+    # the active-slot count is fractional); rounding happens once at read so
+    # the meters stay conservative: sum over slots == measured pool totals
+    decode_serial_cycles: float = 0.0
+    decode_parallel_cycles: float = 0.0
+
+    def cycles(self, variant: str = "serial") -> int:
+        if variant == "serial":
+            return self.prefill_serial_cycles + int(round(self.decode_serial_cycles))
+        return self.prefill_parallel_cycles + int(round(self.decode_parallel_cycles))
+
+    def energy(self, bits: int, variant: str = "serial") -> dict:
+        """Latency/energy of this request's GEMM work on the paper's 16×16
+        unit (time-multiplexed across slots)."""
+        lat, e_j = slot_energy(bits, variant, self.cycles(variant))
+        return {
+            "rid": self.rid,
+            "tokens": self.prompt_tokens + self.decode_tokens,
+            "cycles": self.cycles(variant),
+            "latency_s": lat,
+            "energy_j": e_j,
+        }
 
 
 class Engine:
@@ -83,18 +154,25 @@ class Engine:
         max_batch: int,
         temperature: float = 0.0,
         seed: int = 0,
+        track_energy: bool = False,
     ):
         self.cfg, self.rc, self.params = cfg, rc, params
         self.capacity, self.max_batch = capacity, max_batch
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        self.track_energy = track_energy
+        self.bits = GemmBackend(rc.gemm_backend).bits
 
-        self._prefill = jax.jit(build_prefill(cfg, rc))
-        self._decode = jax.jit(build_decode(cfg, rc), donate_argnums=(1,))
+        self._prefill = jax.jit(build_prefill(cfg, rc, with_stats=track_energy))
+        self._decode = jax.jit(
+            build_decode(cfg, rc, with_stats=track_energy), donate_argnums=(1,)
+        )
         self._insert = jax.jit(self._insert_rows, donate_argnums=(0,))
 
         self.caches = init_caches(cfg, rc, max_batch, capacity)
         self.slots: list[Request | None] = [None] * max_batch
+        self.meters: list[SlotMeter | None] = [None] * max_batch
+        self.finished_meters: list[SlotMeter] = []
         self.pos = 0          # shared decode position
         self.queue: list[Request] = []
         self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
@@ -124,7 +202,17 @@ class Engine:
                     p = jnp.arange(toks.shape[1], dtype=jnp.int32)[None]
                     batch["positions"] = jnp.stack([p, p, p])
                 fresh = init_caches(self.cfg, self.rc, 1, self.capacity)
-                fresh, logits = self._prefill(self.params, fresh, batch)
+                if self.track_energy:
+                    fresh, logits, tree = self._prefill(self.params, fresh, batch)
+                    tot = tree_totals(tree)
+                    self.meters[i] = SlotMeter(
+                        rid=req.rid,
+                        prompt_tokens=toks.shape[1],
+                        prefill_serial_cycles=tot["serial_cycles"],
+                        prefill_parallel_cycles=tot["parallel_cycles"],
+                    )
+                else:
+                    fresh, logits = self._prefill(self.params, fresh, batch)
                 self.key, k = jax.random.split(self.key)
                 tok = sample(k, logits, self.temperature)
                 req.out.append(int(tok[0]))
@@ -141,9 +229,22 @@ class Engine:
         active = [i for i, s in enumerate(self.slots) if s is not None and not s.done]
         if not active:
             return False
-        self.caches, logits = self._decode(
-            self.params, self.caches, self.last_tokens, jnp.asarray(self.pos, jnp.int32)
-        )
+        if self.track_energy:
+            self.caches, logits, tree = self._decode(
+                self.params, self.caches, self.last_tokens,
+                jnp.asarray(self.pos, jnp.int32),
+            )
+            tot = tree_totals(tree)
+            # pool-wide step cycles split evenly over active slots (the GEMM
+            # M axis is the whole pool; the hardware drains max-over-rows, so
+            # exact per-row attribution does not exist)
+            ser = tot["serial_cycles"] / len(active)
+            par = tot["parallel_cycles"] / len(active)
+        else:
+            self.caches, logits = self._decode(
+                self.params, self.caches, self.last_tokens,
+                jnp.asarray(self.pos, jnp.int32),
+            )
         self.pos += 1
         self.key, k = jax.random.split(self.key)
         toks = sample(k, logits, self.temperature)
@@ -151,8 +252,15 @@ class Engine:
         for i in active:
             req = self.slots[i]
             req.out.append(int(toks[i]))
+            if self.track_energy and self.meters[i] is not None:
+                m = self.meters[i]
+                m.decode_tokens += 1
+                m.decode_serial_cycles += ser
+                m.decode_parallel_cycles += par
             if len(req.out) >= req.max_new or self.pos >= self.capacity - 1:
                 req.done = True
+                if self.track_energy and self.meters[i] is not None:
+                    self.finished_meters.append(self.meters[i])
         return True
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -162,3 +270,14 @@ class Engine:
                 break
             steps += 1
         return [s for s in self.slots if s is not None]
+
+    # -------------------------------------------------------------- energy
+    def energy_summary(self, variant: str = "serial") -> list[dict]:
+        """Per-request {rid, tokens, cycles, latency_s, energy_j} on the
+        paper's 16×16 unit — finished requests first, then in-flight slots.
+        Requires ``track_energy=True``."""
+        active = [
+            m for i, m in enumerate(self.meters)
+            if m is not None and self.slots[i] is not None and not self.slots[i].done
+        ]
+        return [m.energy(self.bits, variant) for m in self.finished_meters + active]

@@ -1,14 +1,19 @@
-"""Test-suite bootstrap: make ``hypothesis`` optional.
+"""Test-suite bootstrap: make ``hypothesis`` optional + deterministic.
 
 The property-based tests use hypothesis, but the package is an optional test
 extra (pyproject.toml ``[test]``). When it is missing we install a stub module
 whose ``@given`` replaces each property test with a zero-argument function
 that skips at runtime — so ordinary (non-property) tests in the same modules
 still collect and run instead of the whole module erroring out at import.
+
+When it IS present, a ``ci`` profile (derandomized example generation) is
+registered and loaded when ``HYPOTHESIS_PROFILE=ci`` is exported — that is
+how scripts/ci.sh makes the property suite bit-for-bit reproducible.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import types
 
@@ -16,6 +21,14 @@ import pytest
 
 try:
     import hypothesis  # noqa: F401
+
+    hypothesis.settings.register_profile(
+        "ci", hypothesis.settings(derandomize=True, deadline=None)
+    )
+    # only handle the profile this repo defines; anything else is the
+    # developer's own (hypothesis's pytest plugin may load it later)
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        hypothesis.settings.load_profile("ci")
 except ImportError:
 
     def _settings(*_a, **_k):

@@ -1,0 +1,138 @@
+"""Cross-layer conformance: the three implementations of the tuGEMM cycle
+model must agree **exactly** — outputs AND cycle counts — at every bitwidth.
+
+1. ``core.cycle_sim.simulate_serial/parallel`` — the gate-level golden model
+   (index counter, vector generators, output counter array, cycle by cycle);
+2. ``core.tugemm`` — the analytic model (``step = maxA · max(maxB, 1)``);
+3. the in-kernel ``TuGemmStats`` that ``ops.matmul_fused`` accumulates in
+   the same pass as the GEMM (the serving path's profiler).
+
+The fused kernel is driven with unit scales (``sx=1, sw=1``) on float
+copies of the integer operands, so its internal quantize reproduces the
+exact matrices the simulators see. Corners pinned by the paper's §III-B:
+all-zero B rows (row counters start at zero ⇒ the column counters drain one
+per cycle) and the ±2^(w-1) worst case (serial total = N·(2^(w-1))²).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import int_range, max_magnitude, tugemm, worst_case_cycles
+from repro.core.cycle_sim import simulate_parallel, simulate_serial
+from repro.kernels import ops
+
+BITS = [2, 4, 8]
+SEEDS = [0, 1, 2]
+
+
+def _rand_int(rng, shape, bits):
+    lo, hi = int_range(bits)
+    return rng.integers(lo, hi + 1, size=shape).astype(np.int32)
+
+
+def _agree(A, B, bits, impl="xla"):
+    """Assert golden sim == analytic == in-kernel on (A, B)."""
+    ser = simulate_serial(A, B)
+    par = simulate_parallel(A, B)
+    y_t, st_t = tugemm(jnp.asarray(A), jnp.asarray(B))
+
+    K, N = B.shape
+    y_f, st_f = ops.matmul_fused(
+        jnp.asarray(A, jnp.float32), jnp.asarray(B, jnp.float32),
+        sx=jnp.asarray(1.0, jnp.float32), sw=jnp.ones((N,), jnp.float32),
+        bits=bits, collect_stats=True, impl=impl,
+    )
+
+    ref = A.astype(np.int64) @ B
+    # outputs: exact, all three
+    np.testing.assert_array_equal(ser.Y, ref)
+    np.testing.assert_array_equal(par.Y, ref)
+    np.testing.assert_array_equal(np.asarray(y_t), ref)
+    np.testing.assert_array_equal(np.asarray(y_f).astype(np.int64), ref)
+    # per-step cycles: golden == analytic == in-kernel
+    np.testing.assert_array_equal(ser.step_cycles, np.asarray(st_t.step_cycles))
+    np.testing.assert_array_equal(ser.step_cycles, np.asarray(st_f.step_cycles))
+    # totals, both variants
+    assert ser.total_cycles == int(st_t.serial_cycles) == int(st_f.serial_cycles)
+    assert par.total_cycles == int(st_t.parallel_cycles) == int(st_f.parallel_cycles)
+    return ser
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_three_implementations_agree_random(bits, seed):
+    rng = np.random.default_rng(1000 * bits + seed)
+    M, K, N = (3, 5, 4) if bits == 8 else (4, 6, 5)
+    A = _rand_int(rng, (M, K), bits)
+    B = _rand_int(rng, (K, N), bits)
+    _agree(A, B, bits)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_three_implementations_agree_interpret_kernel(bits):
+    """Same contract through the Pallas kernel body (interpret mode)."""
+    rng = np.random.default_rng(7 + bits)
+    A = _rand_int(rng, (4, 5), bits)
+    B = _rand_int(rng, (5, 3), bits)
+    _agree(A, B, bits, impl="pallas_interpret")
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_all_zero_row_corner(bits):
+    """A whole B row of zeros: the row counters load 0, so every enabled
+    column counter drains one per cycle — step costs max|A| cycles, and the
+    analytic max(maxB, 1) clamp must match the RTL exactly."""
+    rng = np.random.default_rng(20 + bits)
+    A = _rand_int(rng, (3, 4), bits)
+    # nonzero column feeding the zero row (stay inside the w-bit range:
+    # flipping -2^(w-1) to +2^(w-1) would get clipped by the kernel)
+    A[:, 1] = np.where(A[:, 1] == 0, 1, A[:, 1])
+    B = _rand_int(rng, (4, 3), bits)
+    B[1, :] = 0
+    ser = _agree(A, B, bits)
+    assert ser.step_cycles[1] == np.abs(A[:, 1].astype(np.int64)).max()
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_all_zero_column_corner(bits):
+    """A zero A column ends its step instantly (0 cycles) in all models."""
+    rng = np.random.default_rng(30 + bits)
+    A = _rand_int(rng, (3, 4), bits)
+    A[:, 2] = 0
+    B = _rand_int(rng, (4, 3), bits)
+    ser = _agree(A, B, bits)
+    assert ser.step_cycles[2] == 0
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_worst_case_corner(bits):
+    """±2^(w-1) everywhere: serial total = N·(2^(w-1))² (paper §III-B.1),
+    parallel = (2^(w-1))², and all three implementations hit it exactly.
+    (Only -2^(w-1) is representable in two's complement; mixed signs cover
+    the increment and decrement paths of the output counters.)"""
+    m = max_magnitude(bits)
+    N = 4 if bits < 8 else 2          # keep the golden sim's cycle loop small
+    A = np.full((2, N), -m, dtype=np.int32)
+    B = np.full((N, 3), -m, dtype=np.int32)
+    B[:, 1] = m - 1 if bits > 2 else -m   # a positive-ish column for sign mix
+    A[1, :] = m - 1 if bits > 2 else -m
+    ser = _agree(A, B, bits)
+    assert ser.total_cycles == worst_case_cycles(bits, N, "serial")
+    assert simulate_parallel(A, B).total_cycles == worst_case_cycles(bits, N, "parallel")
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_accumulator_input_c(bits):
+    """The C input port (cascading) adds into the output array in both the
+    golden model and the analytic op without costing cycles."""
+    rng = np.random.default_rng(40 + bits)
+    A = _rand_int(rng, (3, 3), bits)
+    B = _rand_int(rng, (3, 2), bits)
+    C = _rand_int(rng, (3, 2), bits)
+    ser = simulate_serial(A, B, C)
+    ser0 = simulate_serial(A, B)
+    y_t, _ = tugemm(jnp.asarray(A), jnp.asarray(B), jnp.asarray(C))
+    np.testing.assert_array_equal(ser.Y, A.astype(np.int64) @ B + C)
+    np.testing.assert_array_equal(ser.Y, np.asarray(y_t))
+    assert ser.total_cycles == ser0.total_cycles

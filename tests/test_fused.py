@@ -24,7 +24,13 @@ from repro.quant import (
 from repro.quant.quantize import fused_scales
 
 BITS = [(8, "int8"), (4, "int4"), (2, "int2")]
-SHAPES = [(16, 64, 32), (7, 33, 19), (1, 5, 3), (130, 260, 36)]
+# three deterministic anchors: the decode-shaped M=1 GEMM, an odd shape, and
+# a multi-block padded one. The breadth of the old ad-hoc shape grid moved to
+# the hypothesis property tests in tests/test_properties.py
+# (test_fused_matches_unfused_any_shape / test_fused_stats_match_unfused_any_
+# shape), which draw arbitrary shapes — these anchors keep coverage in
+# hypothesis-less environments, where the property tests skip.
+SHAPES = [(1, 5, 3), (7, 33, 19), (130, 260, 36)]
 IMPLS = ["xla", "pallas_interpret"]
 
 
@@ -76,7 +82,7 @@ def test_fused_bf16_activations(impl):
 
 # ------------------------------------------------------------- in-pass stats
 @pytest.mark.parametrize("bits,kind", BITS)
-@pytest.mark.parametrize("M,K,N", [(16, 64, 32), (7, 33, 19), (40, 72, 24)])
+@pytest.mark.parametrize("M,K,N", [(7, 33, 19), (40, 72, 24)])
 @pytest.mark.parametrize("impl", IMPLS)
 def test_fused_stats_match_standalone_kernels(bits, kind, M, K, N, impl):
     """ca/rb/cycles from the fused pass == the two standalone absmax sweeps
@@ -105,7 +111,7 @@ def test_fused_stats_match_standalone_kernels(bits, kind, M, K, N, impl):
 
 # ------------------------------------------------------------ prequant mode
 @pytest.mark.parametrize("bits,kind", BITS)
-@pytest.mark.parametrize("M,K,N", [(9, 50, 24), (7, 30, 16), (33, 200, 20)])
+@pytest.mark.parametrize("M,K,N", [(7, 30, 16), (33, 200, 20)])
 @pytest.mark.parametrize("impl", IMPLS)
 def test_fused_matches_unfused_prequant(bits, kind, M, K, N, impl):
     """Packed plane decode fused into the same pass (K=200 exercises the

@@ -1,6 +1,8 @@
-"""Property-based tests (hypothesis) for system invariants added with the
-§Perf changes: MoE dispatch conservation, optimizer state quantization,
-flash decode-direct equivalence."""
+"""Property-based tests (hypothesis) for system invariants: MoE dispatch
+conservation, optimizer state quantization, flash decode-direct equivalence,
+sub-byte plane packing round-trips, and fused-vs-legacy qlinear
+bit-exactness on arbitrary shapes (these last two replace the ad-hoc
+fixed-shape grids that used to live in tests/test_fused.py)."""
 
 import jax
 import jax.numpy as jnp
@@ -8,8 +10,12 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import int_range
+from repro.kernels import ops
+from repro.kernels.packing import BITS_TO_PLANES, pack_planes, unpack_plane
 from repro.models.moe import _dispatch_group
 from repro.optim.adamw import _dq8, _dq8_log, _q8, _q8_log
+from repro.quant import GemmBackend, gemm
 
 
 @settings(deadline=None, max_examples=25)
@@ -89,6 +95,109 @@ def test_q8_log_roundtrip_relative_error(shape, logmag, seed):
     nz = x > x.max() * 1e-7
     rel = np.abs(back[nz] - x[nz]) / x[nz]
     assert rel.max() < 0.04, rel.max()
+
+
+# ------------------------------------------------------- sub-byte packing
+@settings(deadline=None, max_examples=40)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    K=st.integers(1, 40),
+    N=st.integers(1, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip_every_bitwidth(bits, K, N, seed):
+    """pack_weights → per-plane unpack reconstructs the original matrix at
+    every bit width (8-bit is the identity plane), including the zero-pad
+    rows pack_weights appends to reach a plane multiple."""
+    rng = np.random.default_rng(seed)
+    lo, hi = int_range(bits)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(K, N)), jnp.int8)
+    packed = ops.pack_weights(w, bits)
+    planes = 1 if bits == 8 else BITS_TO_PLANES[bits]
+    kp = packed.shape[0]
+    assert kp == -(-K // planes) if planes > 1 else kp == K
+    if bits == 8:
+        np.testing.assert_array_equal(np.asarray(packed), np.asarray(w))
+        return
+    rebuilt = np.concatenate(
+        [np.asarray(unpack_plane(packed, bits, p)) for p in range(planes)], axis=0
+    )
+    np.testing.assert_array_equal(rebuilt[:K], np.asarray(w))
+    assert not rebuilt[K:].any()  # pad rows decode to exact zeros
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    bits=st.sampled_from([2, 4]),
+    K=st.integers(2, 32),
+    N=st.integers(1, 9),
+    plane=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_planes_bit_layout(bits, K, N, plane, seed):
+    """Plane p of row k holds w[k + p*K/planes] in bits [p*bits, (p+1)*bits)
+    — the layout contract the fused kernel's in-VMEM decode relies on."""
+    planes = BITS_TO_PLANES[bits]
+    plane = plane % planes
+    K = K - K % planes or planes
+    rng = np.random.default_rng(seed)
+    lo, hi = int_range(bits)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(K, N)), jnp.int8)
+    packed = np.asarray(pack_planes(w, bits)).astype(np.uint8)
+    mask = (1 << bits) - 1
+    field = (packed >> (plane * bits)) & mask
+    sign = (field ^ (1 << (bits - 1))).astype(np.int32) - (1 << (bits - 1))
+    np.testing.assert_array_equal(sign, np.asarray(w)[plane * (K // planes):(plane + 1) * (K // planes)])
+
+
+# ------------------------------------------- fused vs legacy qlinear pipeline
+@settings(deadline=None, max_examples=25)
+@given(
+    bits=st.sampled_from([(8, "int8"), (4, "int4"), (2, "int2")]),
+    M=st.integers(1, 48),
+    K=st.integers(1, 70),
+    N=st.integers(1, 40),
+    with_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_unfused_any_shape(bits, M, K, N, with_bias, seed):
+    """The one-pass fused pipeline is bit-exact against the legacy unfused
+    composition for arbitrary shapes/bitwidths/bias modes (generalizes the
+    old fixed-shape grid)."""
+    _, kind = bits
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (K, N)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 0.1, (N,)), jnp.float32) if with_bias else None
+    yf = gemm(x, w, backend=GemmBackend(kind, impl="xla", fused=True), bias=b)
+    yu = gemm(x, w, backend=GemmBackend(kind, impl="xla", fused=False), bias=b)
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(yu))
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    bits=st.sampled_from([(8, "int8"), (4, "int4"), (2, "int2")]),
+    M=st.integers(1, 24),
+    K=st.integers(1, 50),
+    N=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_stats_match_unfused_any_shape(bits, M, K, N, seed):
+    """In-pass TuGemmStats equal the standalone absmax-sweep oracle for
+    arbitrary shapes."""
+    b, kind = bits
+    from repro.quant import compute_scale, quantize
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (K, N)), jnp.float32)
+    sx = compute_scale(x, b)
+    sw = compute_scale(w, b, axis=1)
+    expect = ops.unary_step_stats(quantize(x, sx, b), quantize(w, sw.reshape(1, -1), b))
+    _, st_f = ops.matmul_fused(x, w, sx=sx, sw=sw, bits=b, collect_stats=True, impl="xla")
+    np.testing.assert_array_equal(np.asarray(st_f.step_cycles), np.asarray(expect.step_cycles))
+    assert int(st_f.serial_cycles) == int(expect.serial_cycles)
+    assert int(st_f.parallel_cycles) == int(expect.parallel_cycles)
 
 
 @settings(deadline=None, max_examples=10)

@@ -1,5 +1,6 @@
 """Serving engine tests: prefill/decode consistency with full forward,
-continuous batching slot reuse, int8 KV cache accuracy."""
+continuous batching slot reuse, int8 KV cache accuracy, quantized decode
+regression + per-slot tuGEMM cycle accounting."""
 
 import dataclasses
 
@@ -13,6 +14,7 @@ from repro.models import forward, init, init_caches, lm_logits
 from repro.serve import Engine, Request, build_decode, build_prefill
 
 RC = RunConfig(dtype="float32", param_dtype="float32", remat="none")
+RC_Q = dataclasses.replace(RC, gemm_backend="int8")
 
 
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "falcon-mamba-7b", "hymba-1.5b", "deepseek-v2-lite-16b"])
@@ -77,6 +79,83 @@ def test_int8_kv_cache_close_to_fp():
     # int8 KV adds noise but ranking of the argmax should survive
     corr = np.corrcoef(np.asarray(lf).ravel(), np.asarray(l8).ravel())[0, 1]
     assert corr > 0.98, corr
+
+
+# ------------------------------------------------ quantized decode regression
+def test_quantized_decode_matches_fp32_within_dequant_tolerance():
+    """Continuous-batching decode with surgered int8 layers: step logits
+    track the fp32 engine's within dequant noise, and the stats-enabled
+    builders return per-step stats trees from the same jitted call."""
+    from repro.quant.capture import tree_totals
+
+    cfg = get_config("qwen3-0.6b_smoke")
+    params = init(cfg, RC, jax.random.PRNGKey(7))
+    B, T = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(8), (B, T), 0, cfg.vocab_size)
+
+    def roll(rc, with_stats):
+        caches = init_caches(cfg, rc, B, T + 4)
+        pre = build_prefill(cfg, rc, with_stats=with_stats)
+        dec = jax.jit(build_decode(cfg, rc, with_stats=with_stats))
+        out = pre(params, caches, {"tokens": toks})
+        caches, logits = out[0], out[1]
+        steps, trees = [logits], []
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for i in range(3):
+            out = dec(params, caches, nxt, jnp.asarray(T + i, jnp.int32))
+            caches, logits = out[0], out[1]
+            if with_stats:
+                trees.append(out[2])
+            steps.append(logits)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return steps, trees
+
+    ref, _ = roll(RC, False)
+    got, trees = roll(RC_Q, True)
+    for lf, lq in zip(ref, got):
+        c = np.corrcoef(np.asarray(lf).ravel(), np.asarray(lq).ravel())[0, 1]
+        assert c > 0.98, c
+    assert len(trees) == 3
+    for tree in trees:
+        tot = tree_totals(tree)
+        assert tot["serial_cycles"] > tot["parallel_cycles"] > 0
+
+
+def test_engine_per_slot_cycle_stats_monotone():
+    """track_energy engine: per-slot aggregated cycles are monotone
+    non-decreasing (strictly increasing while the slot decodes), tokens
+    count up, and finished requests keep their meters."""
+    cfg = get_config("qwen3-0.6b_smoke")
+    params = init(cfg, RC_Q, jax.random.PRNGKey(9))
+    eng = Engine(cfg, RC_Q, params, capacity=64, max_batch=2, track_energy=True)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=4))
+
+    histories: dict[int, list[tuple[int, int, int]]] = {}
+    for _ in range(40):
+        if not eng.step() and not eng.queue:
+            break
+        for i, s in enumerate(eng.slots):
+            if s is None or s.done or eng.meters[i] is None or eng.meters[i].rid != s.rid:
+                continue
+            m = eng.meters[i]
+            histories.setdefault(s.rid, []).append(
+                (m.decode_tokens, m.cycles("serial"), m.cycles("parallel"))
+            )
+    assert len(histories) == 3
+    for rid, h in histories.items():
+        toks = [t for t, _, _ in h]
+        ser = [s for _, s, _ in h]
+        par = [p for _, _, p in h]
+        assert toks == sorted(toks)
+        # every recorded step decoded one token: strictly increasing cycles
+        assert all(b > a for a, b in zip(ser, ser[1:])), (rid, ser)
+        assert all(b > a for a, b in zip(par, par[1:])), (rid, par)
+        assert h[0][1] > 0  # prefill already charged
+
+    summary = eng.energy_summary()
+    assert {e["rid"] for e in summary} == {0, 1, 2}
+    assert all(e["energy_j"] > 0 and e["latency_s"] > 0 for e in summary)
 
 
 def test_decode_step_is_fixed_shape():
