@@ -122,9 +122,9 @@ def run(fast: bool = False) -> dict:
     # 2) LM workload, same two-pass static scheme
     cfg = get_config("qwen3-0.6b_smoke")
     rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                   gemm_backend="int8", collect_gemm_stats=True)
+                   quant_policy="*=int8:stats")
     rc_cal = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                       gemm_backend="int8")
+                       quant_policy="*=int8")
     params = init(cfg, rc, key)
     with calibrating() as reg2:
         tc = jax.random.randint(jax.random.fold_in(key, 2), (2, 32), 0, cfg.vocab_size)

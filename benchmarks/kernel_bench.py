@@ -15,10 +15,13 @@ Three sections:
    model: fp32 vs surgered int8/int4 (dynamic + prequant), logits
    correlation vs fp32, plus the per-step tuGEMM cycle totals and modeled
    energy from the stats-enabled path (DESIGN.md §6).
+4. **Mixed-policy A/B** — uniform int8 vs the mixed QuantPolicy deployment
+   (attn int8 / mlp int2 / rest bf16, DESIGN.md §7): per-bits cycle split
+   and modeled energy on the same decode step.
 
-Writes ``benchmarks/BENCH_kernels.json`` and ``benchmarks/BENCH_e2e.json``
-so the perf trajectory is tracked across PRs. Usage:
-``PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]``.
+Writes ``benchmarks/BENCH_kernels.json``, ``benchmarks/BENCH_e2e.json`` and
+``benchmarks/BENCH_policy.json`` so the perf trajectory is tracked across
+PRs. Usage: ``PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]``.
 """
 
 from __future__ import annotations
@@ -34,10 +37,11 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.ref import matmul_int_ref
-from repro.quant import GemmBackend, gemm
+from repro.quant import GemmBackend, effective_policy, gemm, tree_totals_by_bits
 
 _OUT = pathlib.Path(__file__).resolve().parent / "BENCH_kernels.json"
 _OUT_E2E = pathlib.Path(__file__).resolve().parent / "BENCH_e2e.json"
+_OUT_POLICY = pathlib.Path(__file__).resolve().parent / "BENCH_policy.json"
 
 
 def _rand_int8(key, shape, bits=8):
@@ -164,11 +168,9 @@ def bench_e2e(fast: bool, write_json: bool) -> dict:
 
     variants = {
         "fp32": rc0,
-        "int8_dynamic": dataclasses.replace(rc0, gemm_backend="int8"),
-        "int4_dynamic": dataclasses.replace(rc0, gemm_backend="int4"),
-        "int4_prequant": dataclasses.replace(
-            rc0, gemm_backend="int4", gemm_mode="prequant"
-        ),
+        "int8_dynamic": dataclasses.replace(rc0, quant_policy="*=int8"),
+        "int4_dynamic": dataclasses.replace(rc0, quant_policy="*=int4"),
+        "int4_prequant": dataclasses.replace(rc0, quant_policy="*=int4:prequant"),
     }
     out: dict = {"backend": jax.default_backend(), "fast": fast, "variants": {}}
     ref_logits = None
@@ -178,7 +180,7 @@ def bench_e2e(fast: bool, write_json: bool) -> dict:
         p = apply_surgery(cfg, rc, params)
         caches = init_caches(cfg, rc, B, cap)
         caches, _ = jax.jit(build_prefill(cfg, rc))(p, caches, {"tokens": toks})
-        quant = rc.gemm_backend != "bf16"
+        quant = effective_policy(rc).is_quant
         dec = jax.jit(build_decode(cfg, rc, with_stats=quant))
         res = dec(p, caches, nxt, pos)
         jax.block_until_ready(res)
@@ -196,8 +198,10 @@ def bench_e2e(fast: bool, write_json: bool) -> dict:
         entry = {"ms_per_step": dt * 1e3, "corr_vs_fp32": corr}
         if quant:
             tot = tree_totals(res[2])
-            bits = GemmBackend(rc.gemm_backend).bits
-            _, e_j = slot_energy(bits, "serial", tot["serial_cycles"])
+            e_j = sum(
+                slot_energy(b, "serial", t["serial_cycles"])[1]
+                for b, t in tree_totals_by_bits(res[2]).items()
+            )
             entry.update(
                 serial_cycles=tot["serial_cycles"],
                 parallel_cycles=tot["parallel_cycles"],
@@ -212,6 +216,82 @@ def bench_e2e(fast: bool, write_json: bool) -> dict:
     if write_json:
         _OUT_E2E.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
         print(f"wrote {_OUT_E2E}")
+    return out
+
+
+def bench_policy(fast: bool, write_json: bool) -> dict:
+    """Mixed-policy e2e cell: uniform int8 vs the exploration paper's mixed
+    deployment (attention int8 / MLP int2) on a decode step — per-bits cycle
+    split, modeled 16×16-unit energy, and logits correlation vs fp32.
+    Writes ``benchmarks/BENCH_policy.json``."""
+    import dataclasses
+
+    from repro.configs.base import RunConfig, get_config
+    from repro.core.report import energy_report
+    from repro.models import init, init_caches
+    from repro.serve import build_decode, build_prefill
+
+    cfg = get_config("qwen3-0.6b_smoke")
+    rc0 = RunConfig(dtype="float32", param_dtype="float32", remat="none")
+    params = init(cfg, rc0, jax.random.PRNGKey(0))
+    B, T, cap = 4, 8, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    nxt = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.asarray(T, jnp.int32)
+    iters = 5 if fast else 20
+
+    policies = {
+        "uniform_int8": "*=int8",
+        "mixed_int8attn_int2mlp": "attn.*=int8,mlp.*=int2,*=bf16",
+    }
+    out: dict = {"backend": jax.default_backend(), "fast": fast, "policies": {}}
+    ref_logits = None
+    # fp32 reference logits for the correlation column
+    caches = init_caches(cfg, rc0, B, cap)
+    caches, _ = jax.jit(build_prefill(cfg, rc0))(params, caches, {"tokens": toks})
+    ref_logits = np.asarray(jax.jit(build_decode(cfg, rc0))(params, caches, nxt, pos)[1])
+
+    print(f"\n{'mixed-policy decode A/B':<26} {'ms/step':>9} {'corr':>7} "
+          f"{'Mcyc(ser)':>10} {'energy/step':>12}  cycles by bits")
+    for name, pol in policies.items():
+        rc = dataclasses.replace(rc0, quant_policy=pol)
+        caches = init_caches(cfg, rc, B, cap)
+        caches, _ = jax.jit(build_prefill(cfg, rc))(params, caches, {"tokens": toks})
+        dec = jax.jit(build_decode(cfg, rc, with_stats=True))
+        res = dec(params, caches, nxt, pos)
+        jax.block_until_ready(res)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            res = dec(params, caches, nxt, pos)
+        jax.block_until_ready(res)
+        dt = (time.perf_counter() - t0) / iters
+        corr = float(np.corrcoef(np.asarray(res[1]).ravel(), ref_logits.ravel())[0, 1])
+        rep = energy_report(res[2], variant="serial")
+        by_bits = {
+            str(b): {"cycles": s["cycles"], "energy_j": s["energy_j"],
+                     "layers": s["layers"]}
+            for b, s in rep.by_bits.items()
+        }
+        out["policies"][name] = {
+            "policy": pol,
+            "ms_per_step": dt * 1e3,
+            "corr_vs_fp32": corr,
+            "serial_cycles": rep.total_cycles,
+            "energy_j_16x16_serial": rep.unit_energy_j,
+            "by_bits": by_bits,
+        }
+        bb = ", ".join(f"int{b}:{s['cycles']}" for b, s in sorted(by_bits.items(), reverse=True))
+        print(f"{name:<26} {dt*1e3:>9.2f} {corr:>7.4f} {rep.total_cycles/1e6:>10.2f} "
+              f"{rep.unit_energy_j*1e6:>10.2f}uJ  {bb}")
+
+    u = out["policies"]["uniform_int8"]
+    m = out["policies"]["mixed_int8attn_int2mlp"]
+    if m["energy_j_16x16_serial"] > 0:
+        out["mixed_energy_ratio"] = u["energy_j_16x16_serial"] / m["energy_j_16x16_serial"]
+        print(f"mixed policy energy: {out['mixed_energy_ratio']:.2f}x less than uniform int8")
+    if write_json:
+        _OUT_POLICY.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {_OUT_POLICY}")
     return out
 
 
@@ -236,6 +316,7 @@ def run(fast: bool = False, write_json: bool | None = None) -> dict:
         _OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
         print(f"wrote {_OUT}")
     out["e2e"] = bench_e2e(fast, write_json)
+    out["policy"] = bench_policy(fast, write_json)
     return out
 
 

@@ -39,9 +39,9 @@ def main():
     profs, agreements = {}, {}
     for bits in (8, 4, 2):
         rc_q = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                         gemm_backend=f"int{bits}", collect_gemm_stats=True)
+                         quant_policy=f"*=int{bits}:stats")
         rc_cal = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                           gemm_backend=f"int{bits}")
+                           quant_policy=f"*=int{bits}")
         with calibrating() as reg:
             hc, _, _ = forward(cfg, rc_cal, params,
                                {"tokens": jax.random.randint(jax.random.fold_in(key, 2), (4, 32), 0, cfg.vocab_size)})

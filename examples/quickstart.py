@@ -54,7 +54,7 @@ def main():
     # 4) a real model through the tuGEMM backend ----------------------------
     cfg = get_config("qwen3-0.6b_smoke")
     rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                   gemm_backend="int8", collect_gemm_stats=True)
+                   quant_policy="*=int8:stats")
     params = init(cfg, rc, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
     with collecting(bitwidth=8) as col:

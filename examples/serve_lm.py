@@ -32,7 +32,8 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                   kv_cache_dtype=args.kv, gemm_backend=args.gemm_backend)
+                   kv_cache_dtype=args.kv,
+                   quant_policy=f"*={args.gemm_backend}")
     params = init(cfg, rc, jax.random.PRNGKey(0))
 
     eng = Engine(cfg, rc, params, capacity=64, max_batch=args.max_batch,

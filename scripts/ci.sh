@@ -22,6 +22,14 @@ if ! python -c "import hypothesis" 2>/dev/null; then
         || echo "ci: hypothesis unavailable — property tests will skip"
 fi
 
+echo "== QuantPolicy suite (mixed precision + deprecation gate)"
+# the policy module runs first and alone so a broken resolution table fails
+# fast; pyproject's filterwarnings turns the QuantPolicy deprecation
+# warnings into errors, so any repo-internal caller still on the legacy
+# gemm_backend/quant_layers knobs fails here (the explicit back-compat
+# tests assert the warning with pytest.warns).
+python -m pytest -x -q -p no:randomly tests/test_policy.py
+
 echo "== tier-1 tests"
 # -p no:randomly: if pytest-randomly is ever installed it would shuffle
 # test order and reseed per test — the conformance suite pins its own seeds
@@ -30,8 +38,8 @@ echo "== tier-1 tests"
 python -m pytest -x -q -p no:randomly --durations=10
 
 echo "== kernel bench (fast)"
-# fast runs never write BENCH_kernels.json / BENCH_e2e.json (the committed
-# artifacts are the full-shape runs)
+# fast runs never write BENCH_kernels.json / BENCH_e2e.json /
+# BENCH_policy.json (the committed artifacts are the full-shape runs)
 python benchmarks/kernel_bench.py --fast
 
 echo "ci: OK"

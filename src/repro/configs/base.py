@@ -116,10 +116,17 @@ SHAPES: dict[str, ShapeConfig] = {
 class RunConfig:
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
+    # canonical quantization knob: a quant.policy.QuantPolicy, its grammar
+    # string ("attn.*=int8,mlp.*=int2,*=bf16"), or its to_json() dict —
+    # declarative per-layer mixed precision, resolved once per GEMM name at
+    # trace/surgery time (quant.policy.effective_policy).
+    quant_policy: object = None
+    # DEPRECATED single-backend knobs: when quant_policy is None these lower
+    # to a one-rule policy (with a DeprecationWarning if non-default).
     gemm_backend: str = "bf16"       # bf16 | int8 | int4 | int2 (quant.qlinear)
     gemm_mode: str = "dynamic"       # dynamic | prequant
     collect_gemm_stats: bool = False
-    # per-layer opt-in for the quant path (quant.surgery): fnmatch patterns
+    # DEPRECATED per-layer opt-in (use quant_policy rules): fnmatch patterns
     # over GEMM names ("attn.*", "mlp.down", "lm_head", ...). Empty tuple =
     # every GEMM routes through the quant backend (previous behavior).
     quant_layers: tuple = ()

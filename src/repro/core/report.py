@@ -9,14 +9,18 @@ PPA model calibrated to the paper's Table I (``core.ppa``):
 - every GEMM instance is charged on a unit sized to its own (M, N, P) via
   ``evaluate_ppa`` (the documented ``S_eff = sqrt(M·P)`` generalization of
   the square calibration points) — "how much would hardware shaped like
-  this layer cost";
+  this layer cost" — **at the bitwidth that layer actually ran at**: under
+  a mixed-precision QuantPolicy each row carries its own bits, clock, and
+  Table-I operating point, and the report adds per-bitwidth subtotal
+  rollups (``by_bits``);
 - leading stack axes are *sequentially executed* instances, so cycles sum
   over them for both variants (distinct GEMMs time-multiplex one unit even
   in the parallel micro-architecture — parallelism in the paper is across
   the N outer-product steps *within* one GEMM);
 - the report also restates the workload on the paper's fixed 16×16
-  evaluation unit (``unit_*`` fields; same cycle totals, Table-I-row
-  power) and carries the uGEMM baseline comparison from Table I.
+  evaluation unit (``unit_*`` fields; same per-bits cycle totals, each at
+  its Table-I-row power/clock) and carries the uGEMM baseline comparison
+  from Table I (per bitwidth in ``by_bits``).
 
 Host-side: call on a concrete (executed) stats tree.
 """
@@ -40,9 +44,10 @@ __all__ = [
 
 @dataclass(frozen=True)
 class LayerEnergy:
-    """One captured GEMM's measured cycles, mapped to PPA."""
+    """One captured GEMM's measured cycles, mapped to PPA at its bitwidth."""
 
     label: str            # tree path, e.g. "groups/0/k0/attn.q"
+    bits: int             # bitwidth this GEMM ran at (mixed policies differ per row)
     M: int
     K: int                # contraction dim (the paper's N)
     N: int                # output dim (the paper's P)
@@ -78,32 +83,48 @@ def ugemm_comparison(bits: int, variant: str) -> dict:
 
 @dataclass
 class EnergyReport:
-    bits: int
+    bits: int | None                  # uniform bitwidth, or None = mixed policy
     variant: str                      # serial | parallel
     layers: list[LayerEnergy] = field(default_factory=list)
     total_cycles: int = 0
     total_macs: int = 0
     total_latency_s: float = 0.0      # time-multiplexed: sum over GEMMs
     total_energy_j: float = 0.0
-    # the same workload on the paper's fixed 16×16 evaluation unit
+    # the same workload on the paper's fixed 16×16 evaluation unit; under a
+    # mixed policy each bits-bucket runs at its own clock/power and the
+    # latency/energy sum over buckets
     unit_power_w: float = 0.0
     unit_latency_s: float = 0.0
     unit_energy_j: float = 0.0
     baseline: dict = field(default_factory=dict)
+    # per-bitwidth subtotal rollup: bits -> {layers, cycles, macs,
+    # latency_s, energy_j, unit_latency_s, unit_energy_j, baseline}
+    by_bits: dict = field(default_factory=dict)
+
+    @property
+    def is_mixed(self) -> bool:
+        return len(self.by_bits) > 1
 
     def render(self, top: int = 12) -> str:
+        label = f"{self.bits}-bit" if not self.is_mixed and self.bits else "mixed-precision"
         hdr = (
-            f"tuGEMM energy report — {self.bits}-bit {self.variant} "
+            f"tuGEMM energy report — {label} {self.variant} "
             f"({len(self.layers)} GEMMs, {self.total_macs/1e6:.2f} MMACs)"
         )
-        lines = [hdr, f"{'layer':<36} {'MxKxN':>16} {'inst':>5} "
+        lines = [hdr, f"{'layer':<36} {'bits':>4} {'MxKxN':>16} {'inst':>5} "
                       f"{'cycles':>12} {'energy':>10} {'share':>6}"]
         tot = max(self.total_energy_j, 1e-30)
         for le in sorted(self.layers, key=lambda l: -l.energy_j)[:top]:
             cyc = le.serial_cycles if self.variant == "serial" else le.parallel_cycles
             lines.append(
-                f"{le.label:<36} {f'{le.M}x{le.K}x{le.N}':>16} {le.instances:>5} "
+                f"{le.label:<36} {le.bits:>4} {f'{le.M}x{le.K}x{le.N}':>16} {le.instances:>5} "
                 f"{cyc:>12} {le.energy_j*1e6:>8.2f}uJ {100*le.energy_j/tot:>5.1f}%"
+            )
+        for b in sorted(self.by_bits, reverse=True):
+            s = self.by_bits[b]
+            lines.append(
+                f"  int{b} subtotal: {s['layers']} GEMMs, {s['cycles']} cycles, "
+                f"{s['energy_j']*1e6:.2f} uJ ({100*s['energy_j']/tot:.1f}%)"
             )
         lines.append(
             f"total: {self.total_cycles} cycles, {self.total_latency_s*1e3:.3f} ms, "
@@ -117,6 +138,13 @@ class EnergyReport:
                 f"vs uGEMM 16x16: {b['area_ratio']:.1f}x less area, "
                 f"{b['power_ratio']:.1f}x less power at w={self.bits}"
             )
+        elif self.is_mixed:
+            for b in sorted(self.by_bits, reverse=True):
+                r = self.by_bits[b]["baseline"]
+                lines.append(
+                    f"vs uGEMM 16x16 at w={b}: {r['area_ratio']:.1f}x less area, "
+                    f"{r['power_ratio']:.1f}x less power"
+                )
         return "\n".join(lines)
 
 
@@ -124,37 +152,64 @@ def _cycles(stats_field) -> int:
     return int(np.asarray(stats_field, dtype=np.int64).sum())
 
 
-def energy_report(tree, *, bits: int, variant: str = "serial") -> EnergyReport:
-    """Roll a stats tree up into the per-request PPA/energy report."""
+def energy_report(tree, *, bits: int | None = None, variant: str = "serial") -> EnergyReport:
+    """Roll a stats tree up into the per-request PPA/energy report.
+
+    ``bits=None`` (the default for mixed-precision policies) charges every
+    layer at the bitwidth recorded in its CapturedGemm; an explicit ``bits``
+    overrides uniformly (the legacy single-backend accounting)."""
     from ..quant.capture import tree_entries  # local: core must not need quant
 
     if variant not in ("serial", "parallel"):
         raise ValueError(f"unknown tuGEMM variant {variant!r}")
-    model = ppa_model(variant)
-    clk = model.clock_hz(bits)
-    rep = EnergyReport(bits=bits, variant=variant,
-                       baseline=ugemm_comparison(bits, variant))
-    unit16 = ppa_model(variant).power_w(bits, 16, 16, 16)
+    rep = EnergyReport(bits=bits, variant=variant)
     for label, e in tree_entries(tree):
+        ebits = int(bits if bits is not None else e.bits)
         ser = _cycles(e.stats.serial_cycles)
         par = _cycles(e.stats.parallel_cycles)
         cyc = ser if variant == "serial" else par
         inst = int(np.asarray(e.stats.serial_cycles).size)
-        unit = evaluate_ppa(variant, bits, e.M, e.K, e.N, cyc)
+        unit = evaluate_ppa(variant, ebits, e.M, e.K, e.N, cyc)
         rep.layers.append(LayerEnergy(
-            label=label, M=e.M, K=e.K, N=e.N, instances=inst,
+            label=label, bits=ebits, M=e.M, K=e.K, N=e.N, instances=inst,
             serial_cycles=ser, parallel_cycles=par,
             max_abs=int(np.asarray(e.stats.max_abs, dtype=np.int64).max()),
             area_mm2=unit.area_mm2, power_w=unit.power_w,
             latency_s=unit.latency_s, energy_j=unit.energy_j,
         ))
+        le = rep.layers[-1]
         rep.total_cycles += cyc
-        rep.total_macs += rep.layers[-1].macs
+        rep.total_macs += le.macs
         rep.total_latency_s += unit.latency_s
         rep.total_energy_j += unit.energy_j
-    rep.unit_power_w = unit16
-    rep.unit_latency_s = rep.total_cycles / clk
-    rep.unit_energy_j = unit16 * rep.unit_latency_s
+        sub = rep.by_bits.setdefault(ebits, {
+            "layers": 0, "cycles": 0, "macs": 0,
+            "latency_s": 0.0, "energy_j": 0.0,
+            "unit_latency_s": 0.0, "unit_energy_j": 0.0,
+            "baseline": ugemm_comparison(ebits, variant),
+        })
+        sub["layers"] += 1
+        sub["cycles"] += cyc
+        sub["macs"] += le.macs
+        sub["latency_s"] += unit.latency_s
+        sub["energy_j"] += unit.energy_j
+
+    # 16×16-unit restatement: each bits bucket at its own clock and power
+    for b, sub in rep.by_bits.items():
+        lat, e_j = slot_energy(b, variant, sub["cycles"])
+        sub["unit_latency_s"], sub["unit_energy_j"] = lat, e_j
+        rep.unit_latency_s += lat
+        rep.unit_energy_j += e_j
+    if rep.unit_latency_s > 0:
+        rep.unit_power_w = rep.unit_energy_j / rep.unit_latency_s
+    if len(rep.by_bits) == 1:
+        only = next(iter(rep.by_bits))
+        if rep.bits is None:
+            rep.bits = only
+        rep.baseline = rep.by_bits[only]["baseline"]
+    elif rep.bits is not None:
+        rep.baseline = ugemm_comparison(rep.bits, variant)
+        rep.unit_power_w = ppa_model(variant).power_w(rep.bits, 16, 16, 16)
     return rep
 
 

@@ -128,9 +128,10 @@ def build_cell(arch: str, shape, rc: RunConfig):
         batch_sh = with_sharding(specs, batch_sharding(specs))
         return build_train_step(cfg, rc), (state_sh, batch_sh), {"donate_argnums": (0,)}
 
+    from ..quant.policy import effective_policy
     from ..serve import build_decode, build_prefill
 
-    if rc.gemm_backend != "bf16" and rc.gemm_mode == "prequant":
+    if effective_policy(rc).any_prequant:
         from ..parallel.state_sharding import abstract_prequant_params, prequant_param_sharding
 
         params_abs = abstract_prequant_params(cfg, rc)

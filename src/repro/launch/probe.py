@@ -16,10 +16,18 @@ this tool.
 ``--energy`` runs the quantized-inference energy cell instead: surger the
 model onto the fused tuGEMM path, execute one forward with per-layer stats
 capture, and print the cycles→PPA energy report (core.report / DESIGN.md
-§6). Use a ``*_smoke`` arch — this path executes, it does not just lower.
+§6–§7). Use a ``*_smoke`` arch — this path executes, it does not just lower.
+
+``--policy`` takes the declarative per-layer mixed-precision QuantPolicy
+(DESIGN.md §7): the ``pattern=kind[:mode]`` grammar, inline JSON, or
+``@policy.json`` / a ``.json`` path (a file produced by
+``QuantPolicy.to_json``). It applies to both modes and supersedes the
+deprecated ``--set gemm_backend=...``.
 
     PYTHONPATH=src python -m repro.launch.probe --arch qwen3-0.6b_smoke --energy \
-        --set gemm_backend=int4 --variant parallel --seq 16
+        --policy "attn.*=int8,mlp.*=int2,*=bf16" --variant parallel --seq 16
+    PYTHONPATH=src python -m repro.launch.probe --arch qwen3-0.6b_smoke --energy \
+        --policy "*=int4:prequant"
 """
 
 import argparse
@@ -52,7 +60,14 @@ def _coerce(v: str):
     return v
 
 
-def probe(arch, shape_name, sets=(), rules=(), multi_pod=False, dump=None, label="probe"):
+def _load_policy(text: str | None):
+    from ..quant.policy import load_policy
+
+    return load_policy(text)
+
+
+def probe(arch, shape_name, sets=(), rules=(), multi_pod=False, dump=None,
+          label="probe", policy=None):
     shape = SHAPES[shape_name]
     rc = cell_runconfig(arch, shape)
     overrides = dict(rc.sharding_overrides)
@@ -60,6 +75,9 @@ def probe(arch, shape_name, sets=(), rules=(), multi_pod=False, dump=None, label
     for s in sets:
         k, v = s.split("=", 1)
         kw[k] = _coerce(v)
+    pol = _load_policy(policy)
+    if pol is not None:
+        kw["quant_policy"] = pol
     for r in rules:
         k, v = r.split("=", 1)
         overrides[k] = _coerce(v)
@@ -146,28 +164,46 @@ def probe(arch, shape_name, sets=(), rules=(), multi_pod=False, dump=None, label
     return rep
 
 
-def energy_probe(arch, sets=(), variant="serial", batch=2, seq=8, label="energy"):
+def energy_probe(arch, sets=(), variant="serial", batch=2, seq=8,
+                 label="energy", policy=None):
     """Execute one surgered quantized forward and print the per-layer
-    cycles→energy report. Returns the EnergyReport."""
+    cycles→energy report — under a mixed QuantPolicy every row is charged
+    at its own bitwidth, with per-bits subtotals. Returns the EnergyReport."""
     import dataclasses as dc
-
-    import jax.numpy as jnp
 
     from ..core.report import energy_report
     from ..models import init
     from ..quant import apply_surgery, forward_with_stats
-    from ..quant.qlinear import GemmBackend
+    from ..quant.policy import effective_policy
 
     cfg = get_config(arch)
     rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
-                   gemm_backend="int8")
+                   quant_policy="*=int8")
+    legacy_keys = {"gemm_backend", "gemm_mode", "collect_gemm_stats", "quant_layers"}
     kw = {}
     for s in sets:
         k, v = s.split("=", 1)
-        kw[k] = _coerce(v)
+        kw[k] = v if k == "gemm_backend" else _coerce(v)
+    legacy_set = sorted(legacy_keys & kw.keys())
+    pol = _load_policy(policy)
+    if pol is not None and legacy_set:
+        raise SystemExit(
+            f"--policy supersedes --set {'/'.join(legacy_set)}; express them "
+            f"in the policy spec (pattern=kind[:mode][:stats])")
+    if pol is not None:
+        kw["quant_policy"] = pol
+    elif legacy_set:
+        # legacy spellings still honored: drop the default policy so the
+        # knobs lower through effective_policy (with its DeprecationWarning)
+        kw.setdefault("gemm_backend", "int8")
+        kw["quant_policy"] = None
     rc = dc.replace(rc, **kw)
-    if rc.gemm_backend == "bf16":
-        raise SystemExit("--energy needs a quant backend: --set gemm_backend=int8|int4|int2")
+    pol = effective_policy(rc)
+    if not pol.is_quant:
+        raise SystemExit(
+            "--energy needs a quant policy: --policy 'attn.*=int8,mlp.*=int2,"
+            "*=bf16' (or --policy '*=int4:prequant')"
+        )
 
     t0 = time.time()
     params = init(cfg, rc, jax.random.PRNGKey(0))
@@ -175,9 +211,9 @@ def energy_probe(arch, sets=(), variant="serial", batch=2, seq=8, label="energy"
     toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0, cfg.vocab_size)
     h, _, _, tree = forward_with_stats(cfg, rc, params, {"tokens": toks})
     h.block_until_ready()
-    rep = energy_report(tree, bits=GemmBackend(rc.gemm_backend).bits, variant=variant)
-    print(f"\n=== {label}: {arch} ({batch}x{seq} tokens, {rc.gemm_backend} "
-          f"{rc.gemm_mode}, ran in {time.time()-t0:.1f}s)")
+    rep = energy_report(tree, variant=variant)
+    print(f"\n=== {label}: {arch} ({batch}x{seq} tokens, "
+          f"policy {pol.describe()}, ran in {time.time()-t0:.1f}s)")
     print(rep.render())
     return rep
 
@@ -187,6 +223,10 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--set", action="append", default=[], help="RunConfig field=value")
+    ap.add_argument("--policy", default=None,
+                    help="per-layer mixed-precision QuantPolicy: "
+                         "'attn.*=int8,mlp.*=int2,*=bf16' grammar, inline "
+                         "JSON, or @file.json / a .json path (DESIGN.md §7)")
     ap.add_argument("--rule", action="append", default=[], help="sharding rule logical=mesh_axis")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dump", default=None, help="write optimized HLO to file")
@@ -198,11 +238,13 @@ def main():
     ap.add_argument("--seq", type=int, default=8)
     args = ap.parse_args()
     if args.energy:
-        energy_probe(args.arch, args.set, args.variant, args.batch, args.seq, args.label)
+        energy_probe(args.arch, args.set, args.variant, args.batch, args.seq,
+                     args.label, policy=args.policy)
         return
     if args.shape is None:
         ap.error("--shape is required (unless --energy)")
-    probe(args.arch, args.shape, args.set, args.rule, args.multi_pod, args.dump, args.label)
+    probe(args.arch, args.shape, args.set, args.rule, args.multi_pod, args.dump,
+          args.label, policy=args.policy)
 
 
 if __name__ == "__main__":

@@ -28,7 +28,11 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--kv-dtype", default="bfloat16", choices=["bfloat16", "int8"])
-    ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"])
+    ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"],
+                    help="uniform precision (shorthand for --policy '*=<kind>')")
+    ap.add_argument("--policy", default=None,
+                    help="per-layer mixed-precision QuantPolicy, e.g. "
+                         "'attn.*=int8,mlp.*=int2,*=bf16' (DESIGN.md §7)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -38,15 +42,24 @@ def main(argv=None):
     cfg = get_config(args.arch)
     on_cpu = jax.default_backend() == "cpu"
     dtype = "float32" if on_cpu else "bfloat16"
+    from ..quant.policy import load_policy
+
     rc = RunConfig(
         dtype=dtype, param_dtype=dtype, remat="none",
-        kv_cache_dtype=args.kv_dtype, gemm_backend=args.gemm_backend,
+        kv_cache_dtype=args.kv_dtype,
+        quant_policy=load_policy(args.policy) or f"*={args.gemm_backend}",
     )
     mesh = make_local_mesh(args.data, args.model)
     rng = np.random.default_rng(args.seed)
 
     with use_mesh(mesh):
         params = init(cfg, rc, jax.random.PRNGKey(args.seed))
+        # pack any prequant rules offline (identity for dynamic/bf16
+        # policies) — without this the engine would silently fall back to
+        # quantize-on-load for weights the policy pinned as plane-packed
+        from ..quant import apply_surgery
+
+        params = apply_surgery(cfg, rc, params)
         eng = Engine(
             cfg, rc, params,
             capacity=args.capacity, max_batch=args.max_batch,

@@ -44,7 +44,11 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"])
+    ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"],
+                    help="uniform precision (shorthand for --policy '*=<kind>')")
+    ap.add_argument("--policy", default=None,
+                    help="per-layer mixed-precision QuantPolicy, e.g. "
+                         "'attn.*=int8,mlp.*=int2,*=bf16' (DESIGN.md §7)")
     ap.add_argument("--moments", default="float32", choices=["float32", "int8"])
     ap.add_argument("--grad-compression", default="none", choices=["none", "int8_ef"])
     ap.add_argument("--remat", default="block", choices=["none", "block", "full"])
@@ -61,10 +65,16 @@ def main(argv=None):
     cfg = get_config(args.arch)
     on_cpu = jax.default_backend() == "cpu"
     dtype = args.dtype or ("float32" if on_cpu else "bfloat16")
+    from ..quant.policy import QuantPolicy, load_policy
+
+    policy = load_policy(args.policy) or QuantPolicy.parse(f"*={args.gemm_backend}")
+    if policy.any_prequant:
+        ap.error("prequant policies are serving-time (packed frozen weights); "
+                 "train with dynamic rules, e.g. --policy '*=int8'")
     rc = RunConfig(
         dtype=dtype,
         param_dtype=dtype,
-        gemm_backend=args.gemm_backend,
+        quant_policy=policy,
         remat=args.remat,
         lr=args.lr,
         total_steps=args.steps,

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from ..parallel.sharding import ParamSpec, constrain
-from ..quant.qlinear import GemmBackend, dense
+from ..quant.qlinear import dense
 
 __all__ = [
     "rms_norm",
@@ -112,10 +112,14 @@ def mlp_spec(d_model: int, d_ff: int, mlp_type: str = "swiglu") -> dict:
     }
 
 
-def _sp_mlp_applicable(ctx, x: jnp.ndarray, p: dict, backend: GemmBackend) -> bool:
+def _sp_mlp_applicable(ctx, x: jnp.ndarray, p: dict, backend, name: str) -> bool:
     """Explicit Megatron-SP MLP path: residual seq-sharded on `model`, SwiGLU
-    weights ff-shardable, bf16 compute (quant backends keep the GSPMD path)."""
-    if ctx is None or backend.kind != "bf16" or "w_gate" not in p:
+    weights ff-shardable, bf16 compute (GEMMs the policy resolves to a quant
+    backend keep the GSPMD path)."""
+    if ctx is None or "w_gate" not in p:
+        return False
+    if any(backend.for_gemm(f"{name}.{s}").kind != "bf16"
+           for s in ("gate", "up", "down")):
         return False
     if "kernel" not in p["w_gate"]:   # surgered prequant leaf — not this path
         return False
@@ -166,13 +170,13 @@ def _sp_mlp(ctx, p: dict, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def mlp(
-    p: dict, x: jnp.ndarray, mlp_type: str = "swiglu", *, backend: GemmBackend, name: str = "mlp"
+    p: dict, x: jnp.ndarray, mlp_type: str = "swiglu", *, backend, name: str = "mlp"
 ) -> jnp.ndarray:
     if mlp_type == "swiglu":
         from ..parallel.sharding import current_ctx
 
         ctx = current_ctx()
-        if _sp_mlp_applicable(ctx, x, p, backend):
+        if _sp_mlp_applicable(ctx, x, p, backend, name):
             return _sp_mlp(ctx, p, x)
         g = dense(p["w_gate"], x, backend=backend, name=f"{name}.gate")
         u = dense(p["w_up"], x, backend=backend, name=f"{name}.up")

@@ -80,12 +80,13 @@ def _dispatch_group(xg: jnp.ndarray, idx: jnp.ndarray, E: int, cap: int):
     return xin, dest
 
 
-def _expert_mm(w, xs: jnp.ndarray, backend: GemmBackend, name: str) -> jnp.ndarray:
+def _expert_mm(w, xs: jnp.ndarray, backend, name: str) -> jnp.ndarray:
     """Batched expert GEMM: vmap ``dense`` over the experts axis.
 
     ``w`` is either a raw stacked kernel (E, K, N) or its surgered prequant
-    form {"qkernel": (E, Kp, N), "qscale": (E, N)} (quant.surgery packs the
-    expert planes offline like any other linear leaf).
+    form {"qkernel": (E, Kp, N), "qscale": (E, N), "qbits"} (quant.surgery
+    packs the expert planes offline like any other linear leaf, at the
+    bitwidth the policy resolves for this expert GEMM name).
 
     Stats capture cannot cross the vmap boundary by side channel (the pushed
     values would be escaped batch tracers), so under an active capture the
@@ -93,7 +94,14 @@ def _expert_mm(w, xs: jnp.ndarray, backend: GemmBackend, name: str) -> jnp.ndarr
     (``return_stats=True`` suppresses the in-``dense`` push) and re-pushed
     here with a leading (E,) experts axis — E sequential GEMMs on the unit.
     """
-    wrap = (lambda wi: wi) if isinstance(w, dict) else (lambda wi: {"kernel": wi})
+    backend = backend.for_gemm(name)  # resolve once, outside the vmap
+    if isinstance(w, dict):
+        wrap = lambda wi: wi
+        qb = w.get("qbits")
+        bits = qb.bits if qb is not None else backend.bits
+    else:
+        wrap = lambda wi: {"kernel": wi}
+        bits = backend.bits
     cap = stats_capture.capturing()
     fn = lambda wi, xi: dense(wrap(wi), xi, backend=backend, name=name,
                               return_stats=cap)
@@ -103,7 +111,7 @@ def _expert_mm(w, xs: jnp.ndarray, backend: GemmBackend, name: str) -> jnp.ndarr
     y, st = out
     if st is not None:
         N = w["qscale"].shape[-1] if isinstance(w, dict) else w.shape[-1]
-        stats_capture.push(name, xs.shape[1], xs.shape[-1], N, st)
+        stats_capture.push(name, xs.shape[1], xs.shape[-1], N, st, bits=bits)
     return y
 
 

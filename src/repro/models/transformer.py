@@ -140,11 +140,16 @@ def model_spec(cfg: ModelConfig) -> dict:
     return spec
 
 
-def backend_from(rc: RunConfig) -> GemmBackend:
-    return GemmBackend(
-        rc.gemm_backend, rc.gemm_mode, rc.collect_gemm_stats,
-        layers=tuple(rc.quant_layers),
-    )
+def backend_from(rc: RunConfig):
+    """The RunConfig's QuantPolicy as a per-GEMM resolution table.
+
+    Every ``dense(...)`` call site hands this object down and qlinear
+    resolves it per GEMM *name* at trace time (memoized dict lookup — the
+    compiled program carries only already-specialized backends, zero
+    pattern matching on the hot path)."""
+    from ..quant.policy import effective_policy
+
+    return effective_policy(rc).resolved()
 
 
 # -------------------------------------------------------------------- cache
@@ -290,6 +295,14 @@ def forward(
     cache_pos: scalar int32 write offset (required with caches).
     """
     backend = backend_from(rc)
+    pol = getattr(backend, "policy", None)
+    if pol is not None and pol.rules:
+        # trace-time only: a typo'd/shadowed rule raises here instead of
+        # silently resolving every GEMM to the default (quant.surgery does
+        # the same for the offline paths)
+        from ..quant.surgery import validate_runtime_policy
+
+        validate_runtime_policy(cfg, pol, params)
     dtype = jnp.dtype(rc.dtype)
     groups = plan_groups(cfg)
 

@@ -121,17 +121,21 @@ def batch_sharding(batch_abs):
 
 
 def abstract_prequant_params(cfg: ModelConfig, rc: RunConfig):
-    """Abstract param tree after offline PTQ packing (serving weight path)."""
-    from ..quant.qlinear import prequantize_tree
+    """Abstract param tree after offline PTQ packing (serving weight path).
 
-    bits = {"int8": 8, "int4": 4, "int2": 2}[rc.gemm_backend]
+    Goes through quant.surgery so the QuantPolicy's per-leaf bitwidths shape
+    the packed tree exactly as the real weights would be (mixed policies
+    pack different leaves at different widths)."""
+    from ..quant.surgery import apply_surgery
+
     params_abs = shape_structs(model_spec(cfg), jnp.dtype(rc.param_dtype))
-    return jax.eval_shape(lambda p: prequantize_tree(p, bits), params_abs)
+    return jax.eval_shape(lambda p: apply_surgery(cfg, rc, p), params_abs)
 
 
 def prequant_param_sharding(cfg: ModelConfig, rc: RunConfig, params_q_abs):
     """Shardings for a prequantized tree: qkernel inherits the kernel's axes
-    (same rank — packing shrinks K in place), qscale gets the output axis."""
+    (same rank — packing shrinks K in place), qscale keeps the leading stack
+    axes plus the output axis (it drops K)."""
     from .sharding import ParamSpec
 
     axes_by_path: dict[str, tuple] = {}
@@ -141,13 +145,21 @@ def prequant_param_sharding(cfg: ModelConfig, rc: RunConfig, params_q_abs):
     for path, spec in flat_axes:
         axes_by_path[_path_str(path)] = spec.axes
 
+    def _kernel_axes(base: str):
+        # nested linear leaf ({.../wq/kernel}) or a raw MoE expert stack
+        # whose ParamSpec sits at the key itself (.../experts/w_gate)
+        axes = axes_by_path.get(base + "/kernel")
+        return axes if axes is not None else axes_by_path.get(base)
+
     def one(path, leaf):
         ps = _path_str(path)
         if ps.endswith("/qkernel"):
-            axes = axes_by_path.get(ps[: -len("/qkernel")] + "/kernel", (None,) * leaf.ndim)
+            kaxes = _kernel_axes(ps[: -len("/qkernel")])
+            axes = kaxes if kaxes is not None else (None,) * leaf.ndim
         elif ps.endswith("/qscale"):
-            kaxes = axes_by_path.get(ps[: -len("/qscale")] + "/kernel", (None, None))
-            axes = (kaxes[-1],)
+            kaxes = _kernel_axes(ps[: -len("/qscale")])
+            axes = (kaxes[:-2] + (kaxes[-1],)) if kaxes is not None \
+                else (None,) * leaf.ndim
         else:
             axes = axes_by_path.get(ps, (None,) * leaf.ndim)
         return sharding_for(axes, leaf.shape)

@@ -1,8 +1,10 @@
-"""Low-precision substrate: PTQ, GEMM backend registry, workload statistics,
-model surgery onto the fused tuGEMM serving path."""
+"""Low-precision substrate: PTQ, the declarative per-layer QuantPolicy,
+GEMM backend registry, workload statistics, model surgery onto the fused
+tuGEMM serving path."""
 
-from .capture import CapturedGemm, capture_stats, tree_entries, tree_totals
-from .qlinear import BF16, GemmBackend, dense, gemm, prequantize_tree
+from .capture import CapturedGemm, capture_stats, tree_entries, tree_totals, tree_totals_by_bits
+from .policy import LayerRule, PolicyError, QuantPolicy, ResolvedPolicy, effective_policy
+from .qlinear import BF16, GemmBackend, QBits, dense, gemm, prequantize_tree
 from .quantize import QuantConfig, compute_scale, dequantize, fake_quant, quantize
 from .stats import StatsCollector, active_collector, collecting
 from .surgery import SurgeryPlan, apply_surgery, forward_with_stats, plan_surgery
@@ -10,9 +12,16 @@ from .surgery import SurgeryPlan, apply_surgery, forward_with_stats, plan_surger
 __all__ = [
     "BF16",
     "GemmBackend",
+    "QBits",
+    "LayerRule",
+    "PolicyError",
+    "QuantPolicy",
+    "ResolvedPolicy",
+    "effective_policy",
     "dense",
     "gemm",
     "prequantize_tree",
+    "tree_totals_by_bits",
     "QuantConfig",
     "compute_scale",
     "dequantize",

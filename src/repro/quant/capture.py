@@ -51,6 +51,9 @@ __all__ = [
     "frame",
     "as_tree",
     "deposit",
+    "tree_entries",
+    "tree_totals",
+    "tree_totals_by_bits",
 ]
 
 
@@ -59,20 +62,24 @@ class CapturedGemm:
     """One quantized GEMM's shape + data-dependent hardware statistics.
 
     ``stats`` arrays may carry leading axes (layers, experts) — each slice is
-    one executed GEMM instance of shape (M, K) @ (K, N)."""
+    one executed GEMM instance of shape (M, K) @ (K, N). ``bits`` is the
+    bitwidth the GEMM actually ran at — under a mixed-precision QuantPolicy
+    different entries of one tree carry different bitwidths, and the PPA
+    rollup (core.report) charges each at its own Table-I operating point."""
 
     name: str
     M: int
     K: int
     N: int
     stats: TuGemmStats
+    bits: int = 8
 
     def tree_flatten(self):
-        return (self.stats,), (self.name, self.M, self.K, self.N)
+        return (self.stats,), (self.name, self.M, self.K, self.N, self.bits)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(aux[0], aux[1], aux[2], aux[3], children[0])
+        return cls(aux[0], aux[1], aux[2], aux[3], children[0], aux[4])
 
 
 jax.tree_util.register_pytree_node(
@@ -95,10 +102,12 @@ def capturing() -> bool:
     return bool(_ACTIVE)
 
 
-def push(name: str, M: int, K: int, N: int, stats: TuGemmStats) -> None:
+def push(name: str, M: int, K: int, N: int, stats: TuGemmStats, bits: int = 8) -> None:
     """Record one GEMM in the innermost frame (no-op when not capturing)."""
     if _ACTIVE:
-        _ACTIVE[-1].frames[-1].append(CapturedGemm(name, int(M), int(K), int(N), stats))
+        _ACTIVE[-1].frames[-1].append(
+            CapturedGemm(name, int(M), int(K), int(N), stats, int(bits))
+        )
 
 
 @contextmanager
@@ -186,3 +195,16 @@ def tree_totals(tree) -> dict[str, int]:
         serial += int(np.asarray(e.stats.serial_cycles, dtype=np.int64).sum())
         parallel += int(np.asarray(e.stats.parallel_cycles, dtype=np.int64).sum())
     return {"serial_cycles": serial, "parallel_cycles": parallel}
+
+
+def tree_totals_by_bits(tree) -> dict[int, dict[str, int]]:
+    """Like :func:`tree_totals`, split by each GEMM's actual bitwidth —
+    cycles at different bitwidths are not interchangeable (the achievable
+    clock and Table-I power differ per width), so mixed-precision energy
+    accounting (serve.engine SlotMeters) must bucket before converting."""
+    out: dict[int, dict[str, int]] = {}
+    for _, e in tree_entries(tree):
+        d = out.setdefault(int(e.bits), {"serial_cycles": 0, "parallel_cycles": 0})
+        d["serial_cycles"] += int(np.asarray(e.stats.serial_cycles, dtype=np.int64).sum())
+        d["parallel_cycles"] += int(np.asarray(e.stats.parallel_cycles, dtype=np.int64).sum())
+    return out

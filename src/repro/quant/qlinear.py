@@ -1,5 +1,11 @@
 """GEMM backend registry — every linear layer in the model zoo routes here.
 
+``gemm``/``dense`` accept either a concrete :class:`GemmBackend` or a
+per-layer policy object (``quant.policy`` — anything with
+``for_gemm(name)``); resolution to a per-GEMM backend happens here at
+trace time, so one forward can mix int8 attention, int2 MLPs and bf16
+heads (DESIGN.md §7).
+
 Backends (DESIGN.md §3):
 
 - ``bf16``              plain mixed-precision dot (fp32 accumulation)
@@ -26,9 +32,11 @@ and is what benchmarks/kernel_bench.py A/Bs against.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 from fnmatch import fnmatchcase
 
+import jax
 import jax.numpy as jnp
 
 from ..core.encoding import int_range
@@ -38,19 +46,38 @@ from . import capture
 from .quantize import compute_scale, fused_scales, quantize
 from .stats import record_stats
 
-__all__ = ["GemmBackend", "BF16", "gemm", "dense", "prequantize_tree"]
+__all__ = ["GemmBackend", "BF16", "QBits", "gemm", "dense", "prequantize_tree"]
+
+
+_LAYERS_DEPRECATION = (
+    "GemmBackend(layers=...) is deprecated; use a quant.policy.QuantPolicy "
+    "(per-layer LayerRule patterns) instead — the layers tuple is lowered to "
+    "a one-rule policy equivalent."
+)
 
 
 @dataclass(frozen=True)
 class GemmBackend:
+    """A *resolved* per-GEMM spec: one precision, one mode, one kernel path.
+
+    Model code no longer carries a single global GemmBackend — it carries a
+    ``quant.policy`` resolution object whose ``for_gemm(name)`` returns the
+    GemmBackend for each GEMM name. A bare GemmBackend still works everywhere
+    a policy does (``for_gemm`` returns itself), which is what the legacy
+    single-backend configs lower to."""
+
     kind: str = "bf16"            # bf16 | int8 | int4 | int2
     mode: str = "dynamic"         # dynamic | prequant (ignored for bf16)
     collect_stats: bool = False   # emit tuGEMM cycle stats per GEMM
     impl: str = "auto"            # kernel dispatch (kernels/ops.py)
     fused: bool = True            # one-pass pipeline (False = legacy unfused)
-    # per-layer opt-in (quant.surgery): fnmatch patterns over GEMM names
-    # ("attn.*", "mlp.down", ...). Empty = every GEMM uses the quant path.
+    # deprecated per-layer opt-in: fnmatch patterns over GEMM names. Use
+    # quant.policy.QuantPolicy instead (this lowers to a one-rule policy).
     layers: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.layers:
+            warnings.warn(_LAYERS_DEPRECATION, DeprecationWarning, stacklevel=3)
 
     @property
     def bits(self) -> int:
@@ -65,8 +92,33 @@ class GemmBackend:
             return False
         return not self.layers or any(fnmatchcase(name, p) for p in self.layers)
 
+    def for_gemm(self, name: str) -> "GemmBackend":
+        """Per-GEMM resolution (the policy protocol): a bare backend applies
+        itself wherever it selects, bf16 elsewhere."""
+        if self.selects(name):
+            return self if not self.layers else replace(self, layers=())
+        return BF16
+
 
 BF16 = GemmBackend("bf16")
+
+
+@dataclass(frozen=True)
+class QBits:
+    """Static bitwidth marker inside a prequantized param leaf.
+
+    Registered as a zero-leaf pytree node: the bits ride the *treedef* (so
+    they are static under jit — the kernel's plane decode needs a Python
+    int), are invisible to jax.tree.map over arrays, and need no sharding.
+    This is how a mixed-precision prequant tree carries per-layer bitwidths
+    through scan stacking, vmapped MoE experts, and jit boundaries."""
+
+    bits: int
+
+
+jax.tree_util.register_pytree_node(
+    QBits, lambda q: ((), q.bits), lambda bits, _: QBits(bits)
+)
 
 
 def _flatten(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
@@ -90,9 +142,10 @@ def _sink_stats(stats, x2, N, backend: GemmBackend, name: str, return_stats: boo
         record_stats(
             name, x2.shape[0], x2.shape[1], N,
             stats.act_max, stats.serial_cycles, stats.parallel_cycles,
+            bits=backend.bits,
         )
     if not return_stats:
-        capture.push(name, x2.shape[0], x2.shape[1], N, stats)
+        capture.push(name, x2.shape[0], x2.shape[1], N, stats, bits=backend.bits)
 
 
 def _emit_fused(
@@ -131,9 +184,14 @@ def gemm(
 ):
     """x (..., K) · w (K, N) [+ bias (N,)] → (..., N), in x.dtype.
 
-    ``return_stats=True`` returns ``(y, TuGemmStats | None)`` instead — the
-    functional form (None on the bf16 path, which runs no tuGEMM hardware)."""
-    if not backend.selects(name):
+    ``backend`` is either an already-resolved :class:`GemmBackend` or any
+    policy object with ``for_gemm(name)`` (quant.policy.ResolvedPolicy /
+    QuantPolicy-compiled table) — resolution happens here, at trace time,
+    once per GEMM name. ``return_stats=True`` returns
+    ``(y, TuGemmStats | None)`` instead — the functional form (None on the
+    bf16 path, which runs no tuGEMM hardware)."""
+    backend = backend.for_gemm(name)
+    if backend.kind == "bf16":
         y = _bf16_gemm(x, w, bias)
         return (y, None) if return_stats else y
 
@@ -184,6 +242,25 @@ def gemm(
     return (y, stats) if return_stats else y
 
 
+def _leaf_backend(leaf: dict, backend: GemmBackend) -> GemmBackend:
+    """Reconcile a resolved backend with a packed leaf's own ``qbits``.
+
+    The leaf is authoritative for the *bitwidth*: its planes were packed
+    offline at that width, and mixed-precision trees carry a different width
+    per leaf. Pre-policy packed trees have no qbits and keep the backend's.
+    A leaf that was packed while the runtime policy resolves the name to
+    bf16 (path-pattern surgery) still runs prequant at its packed width."""
+    qb = leaf.get("qbits")
+    if qb is None:
+        return backend
+    kind = {8: "int8", 4: "int4", 2: "int2"}[qb.bits]
+    if backend.kind == "bf16":
+        return GemmBackend(kind, "prequant")
+    if backend.kind != kind:
+        return replace(backend, kind=kind)
+    return backend
+
+
 def _gemm_prequant(
     x: jnp.ndarray,
     leaf: dict,
@@ -192,6 +269,7 @@ def _gemm_prequant(
     bias: jnp.ndarray | None = None,
     return_stats: bool = False,
 ):
+    backend = _leaf_backend(leaf, backend)
     bits = backend.bits
     x2, lead = _flatten(x)
     sx = compute_scale(x2, bits)
@@ -219,7 +297,8 @@ def _gemm_prequant(
         # legacy path has no unpacked weights on hand: records activation max
         # only, zero cycle counts (the fused path does better).
         record_stats(name, x2.shape[0], x2.shape[1], N,
-                     jnp.abs(xq).max(), jnp.zeros(()), jnp.zeros(()))
+                     jnp.abs(xq).max(), jnp.zeros(()), jnp.zeros(()),
+                     bits=backend.bits)
     y = dequant_bias_ref(y_int, sx, sw, bias, out_dtype=jnp.dtype(x.dtype).name)
     ops.count_dispatch("dequant_epilogue")
     y = y.reshape(*lead, N)
@@ -235,9 +314,13 @@ def dense(
     return_stats: bool = False,
 ):
     """Linear layer over a param leaf dict: {'kernel': (K, N) [, 'bias': (N,)]}
-    or its prequantized form {'qkernel', 'qscale'} (see prequantize_tree /
-    quant.surgery). The bias rides the fused epilogue — it never costs a
-    separate pass. ``return_stats=True`` → ``(y, TuGemmStats | None)``."""
+    or its prequantized form {'qkernel', 'qscale' [, 'qbits']} (see
+    prequantize_tree / quant.surgery — qbits pins each leaf's packed
+    bitwidth in mixed-precision trees). ``backend`` may be a resolved
+    GemmBackend or a policy object (``for_gemm(name)``). The bias rides the
+    fused epilogue — it never costs a separate pass.
+    ``return_stats=True`` → ``(y, TuGemmStats | None)``."""
+    backend = backend.for_gemm(name)
     bias = params.get("bias")
     if "qkernel" in params:
         return _gemm_prequant(x, params, backend, name, bias=bias,
@@ -248,8 +331,10 @@ def dense(
 
 def prequantize_tree(params, bits: int):
     """Offline PTQ: replace every {'kernel': (K, N)} linear leaf-dict with
-    {'qkernel': packed int8, 'qscale': (N,) f32}. Biases/norms/embeddings are
-    left in float (the paper's hardware boundary — GEMMs only)."""
+    {'qkernel': packed int8, 'qscale': (N,) f32, 'qbits': QBits(bits)}.
+    Biases/norms/embeddings are left in float (the paper's hardware
+    boundary — GEMMs only). For per-layer mixed bitwidths use
+    quant.surgery.apply_surgery with a QuantPolicy."""
 
     def walk(node):
         if isinstance(node, dict):
@@ -257,7 +342,8 @@ def prequantize_tree(params, bits: int):
                 w = node["kernel"]
                 sw = compute_scale(w, bits, axis=1)
                 wq = quantize(w, sw.reshape(1, -1), bits)
-                new = {"qkernel": ops.pack_weights(wq, bits), "qscale": sw}
+                new = {"qkernel": ops.pack_weights(wq, bits), "qscale": sw,
+                       "qbits": QBits(bits)}
                 if "bias" in node:
                     new["bias"] = node["bias"]
                 return new

@@ -42,6 +42,7 @@ class GemmRecord:
     max_abs: int
     serial_cycles: int
     parallel_cycles: int
+    bits: int = 8                # bitwidth this GEMM ran at (mixed policies)
 
 
 @dataclass
@@ -77,14 +78,15 @@ def collecting(bitwidth: int = 8):
         _local.collector = prev
 
 
-def record_stats(name: str, M: int, N: int, P: int, max_abs, serial_cycles, parallel_cycles):
+def record_stats(name: str, M: int, N: int, P: int, max_abs, serial_cycles,
+                 parallel_cycles, bits: int = 8):
     """Called from inside jit via jax.debug.callback (see qlinear.gemm)."""
 
     def _host(ma, sc, pc):
         col = active_collector()
         if col is not None:
             col.records.append(
-                GemmRecord(name, M, N, P, int(ma), int(sc), int(pc))
+                GemmRecord(name, M, N, P, int(ma), int(sc), int(pc), int(bits))
             )
 
     jax.debug.callback(_host, max_abs, serial_cycles, parallel_cycles)

@@ -6,15 +6,20 @@ quantized GEMM unit, with the data-dependent cycle counts rolling up into
 
 - :func:`plan_surgery` resolves every linear leaf in a model's param tree to
   the GEMM name its ``forward`` uses at runtime ("attn.q", "mlp.down",
-  "moe.gate", "lm_head", ...) and applies the per-layer opt-in from
-  ``RunConfig.quant_layers`` (fnmatch patterns; empty = everything).
-- :func:`apply_surgery` rewrites the param tree for ``gemm_mode="prequant"``:
-  each selected ``{"kernel": (..., K, N)}`` leaf — including kernels stacked
-  along the scan ``layers`` axis and MoE expert stacks ``(L, E, K, N)`` —
-  is replaced by ``{"qkernel", "qscale"}`` with the sub-byte planes packed
-  offline (``kernels.ops.pack_weights`` layout, 2–8× less weight HBM).
-  Dynamic mode needs no param rewrite (quantize-on-load in the fused
-  kernel); the same plan then only drives the runtime name gating.
+  "moe.gate", "lm_head", ...) and resolves each against the RunConfig's
+  :class:`~repro.quant.policy.QuantPolicy` (per-layer bits/mode; the
+  deprecated ``quant_layers`` patterns lower to a one-rule policy). The
+  policy is validated against the model's real GEMM names — a typo'd or
+  shadowed rule raises instead of silently no-opping.
+- :func:`apply_surgery` packs every leaf whose resolved rule says
+  ``mode="prequant"`` — including kernels stacked along the scan ``layers``
+  axis and MoE expert stacks ``(L, E, K, N)`` — replacing it with
+  ``{"qkernel", "qscale", "qbits"}``: sub-byte planes packed offline at
+  *that leaf's* bitwidth (``kernels.ops.pack_weights`` layout, 2–8× less
+  weight HBM), the static ``qbits`` marker pinning the width per leaf so a
+  mixed-precision tree stays self-describing. Dynamic-mode leaves need no
+  rewrite (quantize-on-load in the fused kernel); the runtime name
+  resolution alone drives them.
 - :func:`forward_with_stats` runs the surgered model and returns, alongside
   the hidden states, the **stats tree**: a pytree of
   :class:`~repro.quant.capture.CapturedGemm` holding every quantized GEMM's
@@ -38,7 +43,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from fnmatch import fnmatchcase
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +50,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig, RunConfig
 from ..kernels import ops
 from . import capture
+from .policy import PolicyError, QuantPolicy, effective_policy
+from .qlinear import QBits
 from .quantize import compute_scale, quantize
 
 __all__ = [
@@ -54,6 +60,8 @@ __all__ = [
     "plan_surgery",
     "apply_surgery",
     "forward_with_stats",
+    "gemm_name_targets",
+    "validate_runtime_policy",
 ]
 
 
@@ -94,35 +102,78 @@ def _gemm_name(cfg: ModelConfig, path: tuple[str, ...]) -> str | None:
 class SurgeryEntry:
     path: tuple          # keys into the param tree (ints for group tuples)
     gemm_name: str       # runtime qlinear name
-    selected: bool       # opted in by RunConfig.quant_layers
+    selected: bool       # resolved to a quant backend by the policy
     shape: tuple         # kernel shape incl. leading stack axes
+    bits: int = 16       # resolved bitwidth for this leaf (16 = bf16)
+    mode: str = "dynamic"  # resolved mode (dynamic | prequant)
 
 
 @dataclass(frozen=True)
 class SurgeryPlan:
-    bits: int
-    mode: str                            # dynamic | prequant
+    policy: QuantPolicy
     entries: tuple[SurgeryEntry, ...]
 
     @property
     def selected(self) -> tuple[SurgeryEntry, ...]:
         return tuple(e for e in self.entries if e.selected)
 
+    @property
+    def bits_used(self) -> tuple[int, ...]:
+        """Distinct quant bitwidths actually assigned (sorted desc)."""
+        return tuple(sorted({e.bits for e in self.selected}, reverse=True))
 
-def _selected(rc: RunConfig, name: str, path: tuple) -> bool:
-    pats = tuple(rc.quant_layers)
-    if not pats:
-        return True
-    dotted = ".".join(str(k) for k in path)
-    return any(fnmatchcase(name, p) or fnmatchcase(dotted, p) for p in pats)
+
+def _dotted(path: tuple) -> str:
+    return ".".join(str(k) for k in path)
+
+
+def _check_stack_consistency(
+    policy: QuantPolicy, targets: list, packed: set | None = None
+) -> None:
+    """Scan/MoE stacking constraint (DESIGN.md §7): the runtime resolves per
+    GEMM *name*, so two param leaves sharing one name (e.g. "attn.q" in two
+    scan groups) whose *path*-pattern resolution differs can only diverge in
+    ``prequant`` mode, where the packed leaf's own ``qbits`` overrides the
+    name-level resolution structurally. A dynamic-mode divergence would
+    silently run at the wrong precision — reject it up front.
+
+    ``packed`` is the set of dotted paths whose leaves actually carry a
+    ``qkernel`` (runtime validation on live params); None means an offline
+    surgery context where packing is guaranteed by the same call. A prequant
+    divergence on a leaf that is *not* packed would silently run at the
+    name-level resolution — rejected too."""
+    for name, path in targets:
+        run = policy.resolve(name)
+        surg = policy.resolve(name, path)
+        if surg == run:
+            continue
+        if surg.kind != "bf16" and surg.mode == "prequant":
+            if packed is None or path in packed:
+                continue  # leaf-level override via packed qbits
+            raise PolicyError(
+                f"policy resolves {name!r} to {surg.kind}:prequant via param "
+                f"path {path!r} but the leaf is not packed (no qkernel): run "
+                f"quant.surgery.apply_surgery on the params first — on float "
+                f"params the layer would silently run at the name-level "
+                f"resolution ({run.kind})"
+            )
+        raise PolicyError(
+            f"policy resolves {name!r} to {run.kind} by name but "
+            f"{surg.kind}:{surg.mode} via param path {path!r}: layers stacked "
+            f"under one scan share a single runtime GEMM name, so per-stack "
+            f"divergence needs mode=prequant (per-leaf packed bits) or "
+            f"name-distinct patterns (split the stack into uniform segments)"
+        )
 
 
 def _walk(cfg, rc, node, path, visit):
-    """Visit every surgery candidate: {'kernel': ...} leaf-dicts and raw
-    MoE expert kernel stacks. ``visit(path, key, array, name)`` returns a
-    replacement for the *containing* entry or None to keep it."""
+    """Visit every qlinear-executed linear: {'kernel': ...} leaf-dicts,
+    their surgered {'qkernel': ...} form, and raw MoE expert kernel stacks.
+    ``visit(path, leaf, name)`` returns a replacement for the *containing*
+    entry or None to keep it."""
     if isinstance(node, dict):
-        if "kernel" in node and getattr(node["kernel"], "ndim", 0) >= 2:
+        if ("qkernel" in node
+                or ("kernel" in node and getattr(node["kernel"], "ndim", 0) >= 2)):
             name = _gemm_name(cfg, path)
             if name is None:
                 return node
@@ -148,23 +199,65 @@ def _walk(cfg, rc, node, path, visit):
     return node
 
 
+def gemm_name_targets(
+    cfg: ModelConfig, params, *, packed: set | None = None
+) -> list[tuple[str, str]]:
+    """Every qlinear-executed GEMM in a param tree as (runtime name, dotted
+    path) — the same ``_walk`` traversal surgery uses, so the match rules
+    cannot drift; works on float trees *and* already-surgered ones
+    (``qkernel`` leaves). Pass a ``packed`` set to also collect the dotted
+    paths whose leaves carry a packed qkernel."""
+    out: list[tuple[str, str]] = []
+
+    def visit(path, leaf, name):
+        d = _dotted(path)
+        out.append((name, d))
+        if packed is not None and "qkernel" in leaf:
+            packed.add(d)
+        return None
+
+    _walk(cfg, None, params, (), visit)
+    return out
+
+
+def validate_runtime_policy(cfg: ModelConfig, policy: QuantPolicy, params: dict) -> None:
+    """Trace-time policy validation for the non-surgery entry points
+    (serve/train/Engine go straight to ``models.forward``): a typo'd or
+    shadowed rule raises PolicyError instead of silently running every GEMM
+    at the bf16 default — the same guarantee plan_surgery/apply_surgery give
+    the offline paths. No-op for rule-less (uniform) policies."""
+    if not policy.rules:
+        return
+    packed: set = set()
+    targets = gemm_name_targets(cfg, params, packed=packed)
+    policy.validate(targets)
+    _check_stack_consistency(policy, targets, packed=packed)
+
+
 def plan_surgery(cfg: ModelConfig, rc: RunConfig, params: dict) -> SurgeryPlan:
-    """Enumerate every linear leaf, its runtime GEMM name, and whether the
-    RunConfig opts it into the quant path."""
+    """Enumerate every linear leaf, its runtime GEMM name, and the per-layer
+    backend the RunConfig's QuantPolicy resolves it to. Validates the policy
+    against the model's actual GEMM names (typo'd / shadowed rules raise
+    PolicyError instead of silently no-opping) and checks the scan/MoE
+    stacking constraint."""
+    policy = effective_policy(rc)
     entries: list[SurgeryEntry] = []
 
     def visit(path, leaf, name):
+        be = policy.resolve(name, _dotted(path))
+        kern = leaf["kernel"] if "kernel" in leaf else leaf["qkernel"]
         entries.append(SurgeryEntry(
-            tuple(path), name, _selected(rc, name, path),
-            tuple(leaf["kernel"].shape),
+            tuple(path), name, be.kind != "bf16",
+            tuple(kern.shape), bits=be.bits, mode=be.mode,
         ))
         return None
 
     _walk(cfg, rc, params, (), visit)
-    from .qlinear import GemmBackend
-
-    bits = GemmBackend(rc.gemm_backend).bits
-    return SurgeryPlan(bits=bits, mode=rc.gemm_mode, entries=tuple(entries))
+    targets = [(e.gemm_name, _dotted(e.path)) for e in entries]
+    if policy.rules:
+        policy.validate(targets)
+    _check_stack_consistency(policy, targets)
+    return SurgeryPlan(policy=policy, entries=tuple(entries))
 
 
 def _prequant_leaf(w: jnp.ndarray, bits: int) -> dict:
@@ -190,28 +283,50 @@ def _prequant_leaf(w: jnp.ndarray, bits: int) -> dict:
 
 
 def apply_surgery(cfg: ModelConfig, rc: RunConfig, params: dict) -> dict:
-    """Rewrite the param tree for the configured quant backend.
+    """Rewrite the param tree for the configured QuantPolicy.
 
-    ``gemm_mode="prequant"``: selected kernels are quantized + plane-packed
-    offline (biases ride along; norms/embeddings untouched — the paper's
-    GEMM-only hardware boundary). ``dynamic``: identity — the fused kernel
-    quantizes on load, so only the runtime name gating applies.
-    """
-    if rc.gemm_backend == "bf16" or rc.gemm_mode != "prequant":
+    Every leaf whose resolved rule says ``mode="prequant"`` is quantized +
+    plane-packed offline **at that leaf's own bitwidth** — a mixed policy
+    produces a tree whose leaves carry different packed widths, each pinned
+    by a static ``qbits`` marker (biases ride along; norms/embeddings
+    untouched — the paper's GEMM-only hardware boundary). Dynamic-mode
+    leaves are left in float — the fused kernel quantizes on load, so only
+    the runtime name resolution applies."""
+    policy = effective_policy(rc)
+    if not policy.is_quant:
         return params
-    from .qlinear import GemmBackend
-
-    bits = GemmBackend(rc.gemm_backend).bits
+    entries_seen: list[tuple[str, str]] = []
 
     def visit(path, leaf, name):
-        if not _selected(rc, name, path):
+        entries_seen.append((name, _dotted(path)))
+        be = policy.resolve(name, _dotted(path))
+        if "qkernel" in leaf:
+            # already packed: idempotent only when the policy still wants
+            # this leaf prequant at the same width — a silently stale
+            # bitwidth would run the model at the wrong precision
+            qb = leaf.get("qbits")
+            want = be.bits if (be.kind != "bf16" and be.mode == "prequant") else None
+            if qb is not None and qb.bits != want:
+                raise PolicyError(
+                    f"param leaf {_dotted(path)} ({name!r}) is packed at "
+                    f"{qb.bits} bits but the policy resolves it to "
+                    f"{be.kind}:{be.mode}; re-run apply_surgery on the "
+                    f"original float params"
+                )
             return None
-        new = _prequant_leaf(leaf["kernel"], bits)
+        if be.kind == "bf16" or be.mode != "prequant":
+            return None
+        new = _prequant_leaf(leaf["kernel"], be.bits)
+        new["qbits"] = QBits(be.bits)
         if "bias" in leaf:
             new["bias"] = leaf["bias"]
         return new
 
-    return _walk(cfg, rc, params, (), visit)
+    out = _walk(cfg, rc, params, (), visit)
+    if policy.rules:
+        policy.validate(entries_seen)
+    _check_stack_consistency(policy, entries_seen)
+    return out
 
 
 def forward_with_stats(

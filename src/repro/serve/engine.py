@@ -35,8 +35,7 @@ from ..configs.base import ModelConfig, RunConfig
 from ..core.report import slot_energy
 from ..models import forward, init_caches, lm_logits
 from ..quant import capture as stats_capture
-from ..quant.capture import tree_totals
-from ..quant.qlinear import GemmBackend
+from ..quant.capture import tree_totals_by_bits
 
 __all__ = [
     "build_prefill",
@@ -104,32 +103,62 @@ class Request:
 
 @dataclass
 class SlotMeter:
-    """Per-request tuGEMM hardware accounting across prefill + decode."""
+    """Per-request tuGEMM hardware accounting across prefill + decode.
+
+    Cycles are bucketed **per bitwidth**: under a mixed QuantPolicy the
+    int8 attention cycles and int2 MLP cycles of one request run at
+    different clocks and Table-I power points, so they must be kept apart
+    until the final latency/energy conversion."""
 
     rid: int
     prompt_tokens: int = 0
     decode_tokens: int = 0
-    prefill_serial_cycles: int = 0
-    prefill_parallel_cycles: int = 0
-    # decode shares accumulate in float (a step's pool-wide total divided by
-    # the active-slot count is fractional); rounding happens once at read so
-    # the meters stay conservative: sum over slots == measured pool totals
-    decode_serial_cycles: float = 0.0
-    decode_parallel_cycles: float = 0.0
+    # bits -> cycles; prefill exact ints, decode shares accumulate in float
+    # (a step's pool-wide total divided by the active-slot count is
+    # fractional); rounding happens once at read so the meters stay
+    # conservative: sum over slots == measured pool totals
+    prefill_by_bits: dict = field(default_factory=dict)   # bits -> {variant: int}
+    decode_by_bits: dict = field(default_factory=dict)    # bits -> {variant: float}
+
+    def add_prefill(self, by_bits: dict) -> None:
+        for b, tot in by_bits.items():
+            d = self.prefill_by_bits.setdefault(b, {"serial": 0, "parallel": 0})
+            d["serial"] += tot["serial_cycles"]
+            d["parallel"] += tot["parallel_cycles"]
+
+    def add_decode_share(self, by_bits: dict, active: int) -> None:
+        for b, tot in by_bits.items():
+            d = self.decode_by_bits.setdefault(b, {"serial": 0.0, "parallel": 0.0})
+            d["serial"] += tot["serial_cycles"] / active
+            d["parallel"] += tot["parallel_cycles"] / active
+
+    def cycles_by_bits(self, variant: str = "serial") -> dict[int, int]:
+        out: dict[int, int] = {}
+        for b, d in self.prefill_by_bits.items():
+            out[b] = out.get(b, 0) + d[variant]
+        for b, d in self.decode_by_bits.items():
+            out[b] = out.get(b, 0) + int(round(d[variant]))
+        return out
 
     def cycles(self, variant: str = "serial") -> int:
-        if variant == "serial":
-            return self.prefill_serial_cycles + int(round(self.decode_serial_cycles))
-        return self.prefill_parallel_cycles + int(round(self.decode_parallel_cycles))
+        return sum(self.cycles_by_bits(variant).values())
 
-    def energy(self, bits: int, variant: str = "serial") -> dict:
+    def energy(self, variant: str = "serial", *, bits: int | None = None) -> dict:
         """Latency/energy of this request's GEMM work on the paper's 16×16
-        unit (time-multiplexed across slots)."""
-        lat, e_j = slot_energy(bits, variant, self.cycles(variant))
+        unit (time-multiplexed across slots). ``bits`` forces the legacy
+        uniform accounting; the default charges each bucket at its own
+        clock/power."""
+        by = self.cycles_by_bits(variant)
+        lat = e_j = 0.0
+        for b, cyc in by.items():
+            l, e = slot_energy(bits if bits is not None else b, variant, cyc)
+            lat += l
+            e_j += e
         return {
             "rid": self.rid,
             "tokens": self.prompt_tokens + self.decode_tokens,
-            "cycles": self.cycles(variant),
+            "cycles": sum(by.values()),
+            "cycles_by_bits": by,
             "latency_s": lat,
             "energy_j": e_j,
         }
@@ -161,7 +190,6 @@ class Engine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.track_energy = track_energy
-        self.bits = GemmBackend(rc.gemm_backend).bits
 
         self._prefill = jax.jit(build_prefill(cfg, rc, with_stats=track_energy))
         self._decode = jax.jit(
@@ -204,13 +232,9 @@ class Engine:
                 fresh = init_caches(self.cfg, self.rc, 1, self.capacity)
                 if self.track_energy:
                     fresh, logits, tree = self._prefill(self.params, fresh, batch)
-                    tot = tree_totals(tree)
-                    self.meters[i] = SlotMeter(
-                        rid=req.rid,
-                        prompt_tokens=toks.shape[1],
-                        prefill_serial_cycles=tot["serial_cycles"],
-                        prefill_parallel_cycles=tot["parallel_cycles"],
-                    )
+                    meter = SlotMeter(rid=req.rid, prompt_tokens=toks.shape[1])
+                    meter.add_prefill(tree_totals_by_bits(tree))
+                    self.meters[i] = meter
                 else:
                     fresh, logits = self._prefill(self.params, fresh, batch)
                 self.key, k = jax.random.split(self.key)
@@ -221,6 +245,13 @@ class Engine:
                 self.last_tokens = self.last_tokens.at[i, 0].set(tok[0])
                 # request decode continues from its prompt length
                 self.pos = max(self.pos, toks.shape[1])
+                if len(req.out) >= req.max_new:
+                    # the prefill-sampled token already satisfied max_new:
+                    # finish here so the request is neither over-generated
+                    # nor charged a decode step's cycle share
+                    req.done = True
+                    if self.track_energy and self.meters[i] is not None:
+                        self.finished_meters.append(self.meters[i])
 
     # ----------------------------------------------------------------- run
     def step(self):
@@ -234,12 +265,10 @@ class Engine:
                 self.params, self.caches, self.last_tokens,
                 jnp.asarray(self.pos, jnp.int32),
             )
-            tot = tree_totals(tree)
             # pool-wide step cycles split evenly over active slots (the GEMM
             # M axis is the whole pool; the hardware drains max-over-rows, so
-            # exact per-row attribution does not exist)
-            ser = tot["serial_cycles"] / len(active)
-            par = tot["parallel_cycles"] / len(active)
+            # exact per-row attribution does not exist), bucketed per bitwidth
+            step_by_bits = tree_totals_by_bits(tree)
         else:
             self.caches, logits = self._decode(
                 self.params, self.caches, self.last_tokens,
@@ -255,8 +284,7 @@ class Engine:
             if self.track_energy and self.meters[i] is not None:
                 m = self.meters[i]
                 m.decode_tokens += 1
-                m.decode_serial_cycles += ser
-                m.decode_parallel_cycles += par
+                m.add_decode_share(step_by_bits, len(active))
             if len(req.out) >= req.max_new or self.pos >= self.capacity - 1:
                 req.done = True
                 if self.track_energy and self.meters[i] is not None:
@@ -273,11 +301,12 @@ class Engine:
 
     # -------------------------------------------------------------- energy
     def energy_summary(self, variant: str = "serial") -> list[dict]:
-        """Per-request {rid, tokens, cycles, latency_s, energy_j} on the
-        paper's 16×16 unit — finished requests first, then in-flight slots.
-        Requires ``track_energy=True``."""
+        """Per-request {rid, tokens, cycles, cycles_by_bits, latency_s,
+        energy_j} on the paper's 16×16 unit — each bits bucket of a mixed
+        policy charged at its own clock/power — finished requests first,
+        then in-flight slots. Requires ``track_energy=True``."""
         active = [
             m for i, m in enumerate(self.meters)
             if m is not None and self.slots[i] is not None and not self.slots[i].done
         ]
-        return [m.energy(self.bits, variant) for m in self.finished_meters + active]
+        return [m.energy(variant) for m in self.finished_meters + active]

@@ -16,6 +16,7 @@ per cycle) and the ±2^(w-1) worst case (serial total = N·(2^(w-1))²).
 
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
 
 from repro.core import int_range, max_magnitude, tugemm, worst_case_cycles
@@ -120,6 +121,89 @@ def test_worst_case_corner(bits):
     ser = _agree(A, B, bits)
     assert ser.total_cycles == worst_case_cycles(bits, N, "serial")
     assert simulate_parallel(A, B).total_cycles == worst_case_cycles(bits, N, "parallel")
+
+
+# ------------------------------------------------- mixed-precision policy
+def test_mixed_precision_chain_matches_analytic_per_layer_bits():
+    """One traced forward through a chain of policy-resolved GEMMs at
+    int8 → int4 → int2: every layer's in-kernel TuGemmStats must match the
+    analytic ``core.tugemm`` cycle model AND the gate-level golden model at
+    *that layer's* bitwidth — the mixed-precision acceptance criterion of
+    the QuantPolicy redesign (DESIGN.md §7), checked exactly."""
+    from repro.quant import QuantPolicy, gemm
+    from repro.quant.capture import capture_stats, tree_entries
+    from repro.quant.quantize import compute_scale, quantize
+
+    policy = QuantPolicy.parse(
+        "l0.*=int8,l1.*=int4,l2.*=int2,*=bf16").resolved()
+    rng = np.random.default_rng(99)
+    x = jnp.asarray(rng.normal(0, 1, (3, 6)), jnp.float32)
+    ws = [jnp.asarray(rng.normal(0, 0.5, (6, 6)), jnp.float32) for _ in range(3)]
+
+    with capture_stats() as cap:
+        h = x
+        for i, w in enumerate(ws):
+            h = gemm(h, w, backend=policy, name=f"l{i}.proj")
+        jax.block_until_ready(h)
+
+    ents = dict(tree_entries(cap.tree))
+    assert {e.bits for e in ents.values()} == {8, 4, 2}
+    # replay qlinear's exact dynamic quantization layer by layer and pit the
+    # captured in-kernel stats against both reference implementations
+    h = x
+    for i, (w, bits) in enumerate(zip(ws, (8, 4, 2))):
+        x2 = np.asarray(h).reshape(-1, h.shape[-1])
+        sx = compute_scale(jnp.asarray(x2), bits)
+        sw = compute_scale(w, bits, axis=1)
+        xq = np.asarray(quantize(jnp.asarray(x2), sx, bits), dtype=np.int32)
+        wq = np.asarray(quantize(w, sw.reshape(1, -1), bits), dtype=np.int32)
+
+        cap_e = ents[f"l{i}.proj"]
+        assert cap_e.bits == bits
+        _, st_t = tugemm(jnp.asarray(xq), jnp.asarray(wq))
+        ser = simulate_serial(xq, wq)
+        par = simulate_parallel(xq, wq)
+        np.testing.assert_array_equal(ser.step_cycles, np.asarray(st_t.step_cycles))
+        np.testing.assert_array_equal(
+            ser.step_cycles, np.asarray(cap_e.stats.step_cycles))
+        assert ser.total_cycles == int(st_t.serial_cycles) \
+            == int(np.asarray(cap_e.stats.serial_cycles))
+        assert par.total_cycles == int(st_t.parallel_cycles) \
+            == int(np.asarray(cap_e.stats.parallel_cycles))
+        assert int(np.asarray(cap_e.stats.max_abs)) <= max_magnitude(bits)
+        h = gemm(h, w, backend=policy, name=f"l{i}.proj")
+
+
+def test_mixed_precision_model_forward_stats_bounded_per_bits():
+    """A real (tiny) transformer under `attn.*=int8,mlp.*=int2,*=bf16`: the
+    per-layer stats tree carries heterogeneous bitwidths and each entry's
+    quantities respect its own width's hard bounds (§III-B.1: max |value| ≤
+    2^(w-1), step cycles ≤ (2^(w-1))²) — an int2 layer accidentally run at
+    int8 blows these immediately."""
+    import dataclasses
+
+    from repro.configs.base import RunConfig, get_config
+    from repro.models import init
+    from repro.quant import forward_with_stats, tree_entries
+
+    cfg = get_config("qwen3-0.6b_smoke")
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
+                   quant_policy="attn.*=int8,mlp.*=int2,*=bf16")
+    params = init(cfg, rc, jax.random.PRNGKey(11))
+    toks = jax.random.randint(jax.random.PRNGKey(12), (2, 8), 0, cfg.vocab_size)
+    _, _, _, tree = forward_with_stats(cfg, rc, params, {"tokens": toks})
+    bits_seen = set()
+    for _, e in tree_entries(tree):
+        want = 8 if e.name.startswith("attn.") else 2
+        assert e.bits == want, (e.name, e.bits)
+        bits_seen.add(e.bits)
+        m = max_magnitude(e.bits)
+        assert int(np.asarray(e.stats.max_abs).max()) <= m
+        assert int(np.asarray(e.stats.step_cycles, dtype=np.int64).max()) <= m * m
+        # worst-case serial bound at this layer's width (paper §III-B.1)
+        ser = np.asarray(e.stats.serial_cycles, dtype=np.int64)
+        assert ser.max() <= worst_case_cycles(e.bits, e.K, "serial")
+    assert bits_seen == {8, 2}
 
 
 @pytest.mark.parametrize("bits", BITS)

@@ -1,0 +1,444 @@
+"""QuantPolicy: the declarative per-layer mixed-precision API (DESIGN.md §7).
+
+- grammar / JSON round-trips, first-match-wins resolution, compile() tables;
+- validate() rejects the old quant_layers footguns (zero-match + shadowed
+  rules) instead of silently no-opping;
+- legacy shim: RunConfig.gemm_backend/quant_layers and GemmBackend(layers=)
+  lower to a one-rule policy with a DeprecationWarning, **bit-identical**
+  outputs and stats trees;
+- mixed-precision end to end: one forward with int8 attention / int2 MLP /
+  bf16 rest emits a stats tree whose entries carry the right bitwidths,
+  rolls up into a heterogeneous energy report, packs prequant leaves at
+  per-leaf widths, and meters per-bits cycles in the serving engine;
+- hypothesis property tests for resolve/serialize round-trips.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import RunConfig, get_config
+from repro.core.encoding import max_magnitude
+from repro.core.report import energy_report
+from repro.models import forward, init
+from repro.quant import (
+    GemmBackend,
+    LayerRule,
+    PolicyError,
+    QuantPolicy,
+    apply_surgery,
+    effective_policy,
+    forward_with_stats,
+    gemm,
+    plan_surgery,
+    tree_entries,
+    tree_totals,
+)
+from repro.serve import Engine, Request
+
+RC32 = RunConfig(dtype="float32", param_dtype="float32", remat="none")
+MIXED = "attn.*=int8,mlp.*=int2,*=bf16"
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_config("qwen3-0.6b_smoke")
+    params = init(cfg, RC32, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    return cfg, params, toks
+
+
+# ------------------------------------------------------------------ grammar
+def test_parse_grammar_and_default():
+    p = QuantPolicy.parse(MIXED)
+    assert [r.pattern for r in p.rules] == ["attn.*", "mlp.*"]
+    assert [r.bits for r in p.rules] == [8, 2]
+    assert p.default.bits == 16 and p.default.pattern == "*"
+    assert p.bits_used() == (8, 2)
+    assert p.is_quant and not p.any_prequant
+
+    p2 = QuantPolicy.parse("mlp.*=int4:prequant,*=int8:unfused:stats")
+    assert p2.rules[0].mode == "prequant" and p2.rules[0].bits == 4
+    assert p2.default.bits == 8 and not p2.default.fused
+    assert p2.default.collect_stats and p2.any_prequant
+
+    with pytest.raises(PolicyError):
+        QuantPolicy.parse("attn.*=int7")
+    with pytest.raises(PolicyError):
+        QuantPolicy.parse("attn.* int8")
+    with pytest.raises(PolicyError, match="unknown token"):
+        QuantPolicy.parse("mlp.*=int4:prequnat,*=bf16")  # typo'd mode
+    with pytest.raises(PolicyError):
+        LayerRule("x", 8, mode="static")
+
+
+def test_first_match_wins():
+    p = QuantPolicy.parse("attn.q=int2,attn.*=int8,*=bf16")
+    assert p.resolve("attn.q").kind == "int2"
+    assert p.resolve("attn.k").kind == "int8"
+    assert p.resolve("mlp.up").kind == "bf16"
+    # order flipped: attn.q would be shadowed
+    shadowed = QuantPolicy.parse("attn.*=int8,attn.q=int2,*=bf16")
+    assert shadowed.resolve("attn.q").kind == "int8"
+    with pytest.raises(PolicyError, match="unreachable"):
+        shadowed.validate(["attn.q", "attn.k"])
+
+
+def test_validate_rejects_zero_match_and_passes_good():
+    p = QuantPolicy.parse("atn.*=int8,*=bf16")  # typo'd pattern
+    with pytest.raises(PolicyError, match="zero GEMMs"):
+        p.validate(["attn.q", "mlp.up"])
+    QuantPolicy.parse(MIXED).validate(["attn.q", "mlp.up"])  # no raise
+    with pytest.raises(PolicyError):
+        QuantPolicy.parse(MIXED).validate([])
+
+
+def test_json_round_trip_and_dict_policy():
+    p = QuantPolicy.parse("attn.*=int8:prequant,mlp.*=int2:unfused,*=int4:stats")
+    assert QuantPolicy.from_json(p.to_json()) == p
+    # a RunConfig can carry the parsed-JSON dict form too
+    rc = dataclasses.replace(RC32, quant_policy=json.loads(p.to_json()))
+    assert effective_policy(rc) == p
+    # and the grammar string form
+    rc2 = dataclasses.replace(RC32, quant_policy=MIXED)
+    assert effective_policy(rc2) == QuantPolicy.parse(MIXED)
+
+
+def test_compile_builds_table_and_validates(smoke):
+    cfg, params, _ = smoke
+    p = QuantPolicy.parse(MIXED)
+    names = ["attn.q", "attn.k", "attn.v", "attn.o", "mlp.gate", "mlp.up",
+             "mlp.down", "lm_head"]
+    rp = p.compile(names)
+    for n in names:
+        assert rp.for_gemm(n) == p.resolve(n)
+    assert rp.bits_for("mlp.down") == 2 and rp.bits_for("attn.v") == 8
+    with pytest.raises(PolicyError):
+        p.compile(["lm_head"])  # neither rule matches anything
+
+
+# ------------------------------------------------------------- legacy shim
+def test_legacy_runconfig_lowering_warns_and_is_bit_identical(smoke):
+    cfg, params, toks = smoke
+    rc_old = dataclasses.replace(RC32, gemm_backend="int8",
+                                 quant_layers=("attn.*",))
+    rc_new = dataclasses.replace(RC32, quant_policy="attn.*=int8,*=bf16")
+    with pytest.warns(DeprecationWarning, match="deprecated.*QuantPolicy"):
+        h_old, _, _, t_old = forward_with_stats(cfg, rc_old, params, {"tokens": toks})
+    h_new, _, _, t_new = forward_with_stats(cfg, rc_new, params, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(h_old), np.asarray(h_new))
+    ents_old, ents_new = tree_entries(t_old), tree_entries(t_new)
+    assert [l for l, _ in ents_old] == [l for l, _ in ents_new]
+    for (_, a), (_, b) in zip(ents_old, ents_new):
+        assert (a.name, a.M, a.K, a.N, a.bits) == (b.name, b.M, b.K, b.N, b.bits)
+        np.testing.assert_array_equal(np.asarray(a.stats.serial_cycles),
+                                      np.asarray(b.stats.serial_cycles))
+        np.testing.assert_array_equal(np.asarray(a.stats.parallel_cycles),
+                                      np.asarray(b.stats.parallel_cycles))
+
+
+def test_legacy_uniform_backend_bit_exact_with_one_rule_policy(smoke):
+    """The ISSUE acceptance criterion: gemm_backend="int8" stays bit-exact
+    with its lowered `*=int8` policy, outputs AND stats."""
+    cfg, params, toks = smoke
+    rc_old = dataclasses.replace(RC32, gemm_backend="int8")
+    with pytest.warns(DeprecationWarning):
+        h_old, _, _, t_old = forward_with_stats(cfg, rc_old, params, {"tokens": toks})
+    h_new, _, _, t_new = forward_with_stats(
+        cfg, dataclasses.replace(RC32, quant_policy="*=int8"),
+        params, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(h_old), np.asarray(h_new))
+    assert tree_totals(t_old) == tree_totals(t_new)
+
+
+def test_gemm_backend_layers_kwarg_warns_and_matches_policy():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    with pytest.warns(DeprecationWarning, match="QuantPolicy"):
+        be = GemmBackend("int8", layers=("attn.*",))
+    y_sel = gemm(x, w, backend=be, name="attn.q")
+    y_not = gemm(x, w, backend=be, name="mlp.up")
+    pol = QuantPolicy.parse("attn.*=int8,*=bf16")
+    np.testing.assert_array_equal(
+        np.asarray(y_sel), np.asarray(gemm(x, w, backend=pol.resolved(), name="attn.q")))
+    np.testing.assert_array_equal(
+        np.asarray(y_not), np.asarray(gemm(x, w, backend=pol.resolved(), name="mlp.up")))
+
+
+# ----------------------------------------------------- mixed precision e2e
+def test_mixed_forward_stats_carry_per_layer_bits(smoke):
+    cfg, params, toks = smoke
+    rc = dataclasses.replace(RC32, quant_policy=MIXED)
+    h, _, _, tree = forward_with_stats(cfg, rc, params, {"tokens": toks})
+    ents = tree_entries(tree)
+    bits_by_name = {e.name: e.bits for _, e in ents}
+    assert bits_by_name == {
+        "attn.q": 8, "attn.k": 8, "attn.v": 8, "attn.o": 8,
+        "mlp.gate": 2, "mlp.up": 2, "mlp.down": 2,
+    }
+    # the in-kernel quantized operands respect each layer's range: the
+    # max-|value| statistic is bounded by that layer's 2^(w-1)
+    for _, e in ents:
+        assert int(np.asarray(e.stats.max_abs).max()) <= max_magnitude(e.bits)
+        # cycle counts bounded by the per-bits worst case (§III-B.1):
+        # an int2 layer mistakenly run at int8 would blow far past 4 per step
+        step = np.asarray(e.stats.step_cycles, dtype=np.int64)
+        assert step.max() <= max_magnitude(e.bits) ** 2
+
+    # output still tracks the fp32 reference direction (int2 MLP is lossy)
+    h_ref, _, _ = forward(cfg, RC32, params, {"tokens": toks})
+    corr = np.corrcoef(np.asarray(h).ravel(), np.asarray(h_ref).ravel())[0, 1]
+    assert corr > 0.3, corr
+
+
+def test_mixed_energy_report_rows_and_subtotals(smoke):
+    cfg, params, toks = smoke
+    rc = dataclasses.replace(RC32, quant_policy=MIXED)
+    _, _, _, tree = forward_with_stats(cfg, rc, params, {"tokens": toks})
+    rep = energy_report(tree, variant="serial")
+    assert rep.is_mixed and rep.bits is None
+    row_bits = {le.label.split("/")[-1]: le.bits for le in rep.layers}
+    assert row_bits["attn.q"] == 8 and row_bits["mlp.down"] == 2
+    assert set(rep.by_bits) == {8, 2}
+    for b, sub in rep.by_bits.items():
+        assert sub["cycles"] > 0 and sub["energy_j"] > 0
+        assert sub["baseline"]["power_ratio"] > 1
+    assert rep.total_cycles == sum(s["cycles"] for s in rep.by_bits.values())
+    assert rep.unit_energy_j == pytest.approx(
+        sum(s["unit_energy_j"] for s in rep.by_bits.values()))
+    text = rep.render()
+    assert "mixed-precision" in text and "int2 subtotal" in text and "int8 subtotal" in text
+
+
+def test_mixed_prequant_packs_per_leaf_bits(smoke):
+    """apply_surgery under a mixed prequant policy: each leaf packed at its
+    own width (qbits marker + K shrink factor), forward matches dynamic."""
+    cfg, params, toks = smoke
+    pol = "attn.*=int4:prequant,mlp.*=int2:prequant,*=bf16"
+    rc = dataclasses.replace(RC32, quant_policy=pol)
+    qparams = apply_surgery(cfg, rc, params)
+    blk = qparams["groups"][0]["k0"]
+    wq_attn = blk["attn"]["wq"]
+    wq_mlp = blk["ffn"]["w_gate"]
+    assert wq_attn["qbits"].bits == 4 and wq_mlp["qbits"].bits == 2
+    K_attn = params["groups"][0]["k0"]["attn"]["wq"]["kernel"].shape[1]
+    K_mlp = params["groups"][0]["k0"]["ffn"]["w_gate"]["kernel"].shape[1]
+    assert wq_attn["qkernel"].shape[1] == -(-K_attn // 2)   # 2 int4 per byte
+    assert wq_mlp["qkernel"].shape[1] == -(-K_mlp // 4)     # 4 int2 per byte
+    # outside the policy's quant rules everything stays float
+    assert "embedding" in qparams["embed"]
+
+    h_pq, _, _, t_pq = forward_with_stats(cfg, rc, qparams, {"tokens": toks})
+    rc_dy = dataclasses.replace(
+        RC32, quant_policy="attn.*=int4,mlp.*=int2,*=bf16")
+    h_dy, _, _, t_dy = forward_with_stats(cfg, rc_dy, params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(h_pq), np.asarray(h_dy),
+                               rtol=2e-6, atol=2e-6)
+    assert tree_totals(t_pq) == tree_totals(t_dy)
+    assert {e.bits for _, e in tree_entries(t_pq)} == {4, 2}
+
+
+def test_apply_surgery_rejects_stale_packed_bits(smoke):
+    """Re-applying surgery with a different prequant width on an
+    already-packed tree must raise, not silently keep the old planes."""
+    cfg, params, _ = smoke
+    rc8 = dataclasses.replace(RC32, quant_policy="*=int8:prequant")
+    rc4 = dataclasses.replace(RC32, quant_policy="*=int4:prequant")
+    p8 = apply_surgery(cfg, rc8, params)
+    assert apply_surgery(cfg, rc8, p8) is not None  # same policy: idempotent
+    with pytest.raises(PolicyError, match="packed at 8 bits"):
+        apply_surgery(cfg, rc4, p8)
+
+
+def test_plan_surgery_resolves_per_entry_and_validates(smoke):
+    cfg, params, _ = smoke
+    rc = dataclasses.replace(RC32, quant_policy=MIXED)
+    plan = plan_surgery(cfg, rc, params)
+    by_name = {e.gemm_name: e for e in plan.entries}
+    assert by_name["attn.q"].bits == 8 and by_name["attn.q"].selected
+    assert by_name["mlp.down"].bits == 2
+    assert plan.bits_used == (8, 2)
+    # rules leave the rest on the bf16 default
+    plan_attn = plan_surgery(
+        cfg, dataclasses.replace(RC32, quant_policy="attn.*=int8,*=bf16"), params)
+    by_name2 = {e.gemm_name: e for e in plan_attn.entries}
+    assert not by_name2["mlp.down"].selected and by_name2["mlp.down"].bits == 16
+    # typo'd rule raises instead of silently no-opping
+    rc_typo = dataclasses.replace(RC32, quant_policy="atn.*=int8,*=bf16")
+    with pytest.raises(PolicyError, match="zero GEMMs"):
+        plan_surgery(cfg, rc_typo, params)
+    with pytest.raises(PolicyError, match="zero GEMMs"):
+        apply_surgery(cfg, rc_typo, params)
+
+
+def test_describe_round_trips_all_tokens():
+    p = QuantPolicy.parse("mlp.*=int4:prequant:unfused:stats,*=int8:xla")
+    assert QuantPolicy.parse(p.describe()) == p
+    assert "unfused" in p.describe() and "stats" in p.describe()
+
+
+def test_compile_table_resolves_by_name_not_last_path():
+    """Two scan groups share the runtime name attn.q; a path rule hitting
+    one group must not hijack the name's table entry (the packed leaf's
+    qbits carries the divergence instead)."""
+    p = QuantPolicy.parse("groups.1.*=int2:prequant,attn.*=int8,*=bf16")
+    rp = p.compile([("attn.q", "groups.0.k0.attn.wq"),
+                    ("attn.q", "groups.1.k0.attn.wq")])
+    assert rp.for_gemm("attn.q").kind == "int8"
+
+
+def test_path_divergent_prequant_requires_packed_leaf(smoke):
+    """A path-pattern prequant rule on *float* params would silently run at
+    the name-level resolution — forward rejects it; after apply_surgery the
+    packed leaves carry their own qbits and the same policy runs."""
+    cfg, params, toks = smoke
+    rc = dataclasses.replace(
+        RC32, quant_policy="groups.*.attn.wq=int2:prequant,attn.*=int8,*=bf16")
+    with pytest.raises(PolicyError, match="not packed"):
+        forward(cfg, rc, params, {"tokens": toks})
+    qparams = apply_surgery(cfg, rc, params)
+    _, _, _, tree = forward_with_stats(cfg, rc, qparams, {"tokens": toks})
+    bits_by_name = {e.name: e.bits for _, e in tree_entries(tree)}
+    assert bits_by_name["attn.q"] == 2      # packed override via qbits
+    assert bits_by_name["attn.k"] == 8      # name-level resolution
+
+
+def test_runtime_forward_validates_rules(smoke):
+    """The serve/train entry points never run surgery — forward itself must
+    reject a typo'd rule instead of silently running everything bf16."""
+    cfg, params, toks = smoke
+    rc = dataclasses.replace(RC32, quant_policy="atn.*=int8,*=bf16")
+    with pytest.raises(PolicyError, match="zero GEMMs"):
+        forward(cfg, rc, params, {"tokens": toks})
+    rc2 = dataclasses.replace(RC32, quant_policy="attn.*=int8,attn.q=int2,*=bf16")
+    with pytest.raises(PolicyError, match="unreachable"):
+        forward(cfg, rc2, params, {"tokens": toks})
+
+
+def test_conflicting_legacy_and_policy_knobs_raise():
+    rc = dataclasses.replace(RC32, quant_policy="*=int8", gemm_backend="int4")
+    with pytest.raises(PolicyError, match="both quant_policy"):
+        effective_policy(rc)
+    rc2 = dataclasses.replace(RC32, quant_policy="*=int8",
+                              quant_layers=("attn.*",))
+    with pytest.raises(PolicyError, match="both quant_policy"):
+        effective_policy(rc2)
+
+
+def test_engine_meters_bucket_cycles_per_bits():
+    cfg = get_config("qwen3-0.6b_smoke")
+    rc = dataclasses.replace(RC32, quant_policy=MIXED)
+    params = init(cfg, rc, jax.random.PRNGKey(9))
+    eng = Engine(cfg, rc, params, capacity=64, max_batch=2, track_energy=True)
+    for rid in range(2):
+        eng.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=3))
+    eng.run()
+    summary = eng.energy_summary()
+    assert {e["rid"] for e in summary} == {0, 1}
+    for e in summary:
+        assert set(e["cycles_by_bits"]) == {8, 2}
+        assert all(c > 0 for c in e["cycles_by_bits"].values())
+        assert e["cycles"] == sum(e["cycles_by_bits"].values())
+        assert e["energy_j"] > 0 and e["latency_s"] > 0
+
+
+def test_prequant_sharding_covers_raw_expert_stacks():
+    """MoE expert kernels have their ParamSpec at the stack key itself (no
+    nested 'kernel'); the packed qkernel/qscale must inherit those axes
+    instead of silently replicating every expert on every chip."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.sharding import sharding_for, use_mesh
+    from repro.parallel.state_sharding import (
+        abstract_prequant_params,
+        prequant_param_sharding,
+    )
+
+    cfg = get_config("deepseek-v2-lite-16b_smoke")
+    rc = dataclasses.replace(RC32, quant_policy="*=int8:prequant")
+    with use_mesh(make_local_mesh(1, 1)):
+        abs_q = abstract_prequant_params(cfg, rc)
+        sh = prequant_param_sharding(cfg, rc, abs_q)
+        flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+
+        def leaves(suffix):
+            return [s for p, s in flat
+                    if "experts" in jax.tree_util.keystr(p)
+                    and jax.tree_util.keystr(p).endswith(f"['w_gate']['{suffix}']")]
+
+        qks, qss = leaves("qkernel"), leaves("qscale")
+        assert qks and qss
+        want_qk = sharding_for(("layers", "experts", "embed", "mlp")).spec
+        want_qs = sharding_for(("layers", "experts", "mlp")).spec
+        assert all(s.spec == want_qk for s in qks), (qks[0].spec, want_qk)
+        assert all(s.spec == want_qs for s in qss), (qss[0].spec, want_qs)
+
+
+# ------------------------------------------------------- property tests
+_KINDS = st.sampled_from([16, 8, 4, 2])
+_PATTERNS = st.sampled_from(
+    ["attn.*", "mlp.*", "attn.q", "mlp.down", "lm_head", "ssm.*", "moe.*", "*"])
+_RULES = st.builds(
+    LayerRule,
+    pattern=st.sampled_from(["attn.*", "mlp.*", "attn.q", "mlp.down", "lm_head"]),
+    bits=_KINDS,
+    mode=st.sampled_from(["dynamic", "prequant"]),
+    fused=st.booleans(),
+    impl=st.sampled_from(["auto", "xla"]),
+    collect_stats=st.booleans(),
+)
+_POLICIES = st.builds(
+    QuantPolicy,
+    rules=st.lists(_RULES, max_size=5),
+    default=st.builds(LayerRule, pattern=st.just("*"), bits=_KINDS,
+                      mode=st.sampled_from(["dynamic", "prequant"])),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(policy=_POLICIES)
+def test_policy_json_round_trip_property(policy):
+    assert QuantPolicy.from_json(policy.to_json()) == policy
+    # to_json is pure JSON (no object cycles / custom types)
+    json.loads(policy.to_json())
+
+
+@settings(max_examples=60, deadline=None)
+@given(policy=_POLICIES,
+       names=st.lists(st.sampled_from(
+           ["attn.q", "attn.k", "mlp.up", "mlp.down", "lm_head", "ssm.dt"]),
+           min_size=1, max_size=6, unique=True))
+def test_policy_resolution_consistency_property(policy, names):
+    """Memoized table == direct resolve; resolution is deterministic and
+    respects first-match-wins (the resolved rule is the first that matches)."""
+    rp = policy.resolved()
+    for n in names:
+        be = rp.for_gemm(n)
+        assert be == policy.resolve(n)
+        assert be == rp.for_gemm(n)  # memoized lookup is stable
+        rule, idx = policy.rule_for(n)
+        if idx is not None:
+            assert rule.matches(n)
+            assert not any(r.matches(n) for r in policy.rules[:idx])
+        else:
+            assert not any(r.matches(n) for r in policy.rules)
+        assert be.bits == rule.bits
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=st.lists(
+    st.tuples(st.sampled_from(["attn.*", "mlp.*", "attn.q", "lm_head"]),
+              st.sampled_from(["int8", "int4", "int2", "bf16"])),
+    min_size=1, max_size=4))
+def test_grammar_round_trip_property(spec):
+    """describe() of a parsed grammar string re-parses to the same policy."""
+    text = ",".join(f"{p}={k}" for p, k in spec) + ",*=bf16"
+    pol = QuantPolicy.parse(text)
+    assert QuantPolicy.parse(pol.describe()) == pol

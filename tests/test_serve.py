@@ -14,7 +14,7 @@ from repro.models import forward, init, init_caches, lm_logits
 from repro.serve import Engine, Request, build_decode, build_prefill
 
 RC = RunConfig(dtype="float32", param_dtype="float32", remat="none")
-RC_Q = dataclasses.replace(RC, gemm_backend="int8")
+RC_Q = dataclasses.replace(RC, quant_policy="*=int8")
 
 
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "falcon-mamba-7b", "hymba-1.5b", "deepseek-v2-lite-16b"])
@@ -156,6 +156,18 @@ def test_engine_per_slot_cycle_stats_monotone():
     summary = eng.energy_summary()
     assert {e["rid"] for e in summary} == {0, 1, 2}
     assert all(e["energy_j"] > 0 and e["latency_s"] > 0 for e in summary)
+
+
+def test_max_new_one_generates_exactly_one_token():
+    """The prefill-sampled token counts toward max_new: a max_new=1 request
+    finishes at admission without being charged a decode step."""
+    cfg = get_config("qwen3-0.6b_smoke")
+    params = init(cfg, RC, jax.random.PRNGKey(5))
+    eng = Engine(cfg, RC, params, capacity=32, max_batch=2)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=1))
+    eng.run()
+    done = [s for s in eng.slots if s is not None]
+    assert len(done) == 1 and done[0].done and len(done[0].out) == 1
 
 
 def test_decode_step_is_fixed_shape():

@@ -7,7 +7,7 @@ core.report): the PR-2 tentpole acceptance tests.
 - the tree's cycle counts are validated against the **gate-level golden
   model** (``core.cycle_sim``) on a small layer by reconstructing the exact
   integer operands the fused kernel quantized;
-- per-layer opt-in via ``RunConfig.quant_layers`` gates both the compute
+- per-layer opt-in via a QuantPolicy rule set gates both the compute
   path and the stats tree;
 - offline prequant surgery (packed planes, stacked scan/MoE axes) matches
   dynamic quantize-on-load;
@@ -44,8 +44,9 @@ MIN_CORR = {8: 0.99, 4: 0.85, 2: 0.35}
 BITS = [(8, "int8"), (4, "int4"), (2, "int2")]
 
 
-def _rc(kind, **kw):
-    return dataclasses.replace(RC32, gemm_backend=kind, **kw)
+def _rc(kind, mode="dynamic", **kw):
+    spec = f"*={kind}" + (f":{mode}" if mode != "dynamic" else "")
+    return dataclasses.replace(RC32, quant_policy=spec, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -121,7 +122,7 @@ def test_stats_tree_validated_against_cycle_sim(bits, kind):
 # ----------------------------------------------------------- per-layer opt-in
 def test_quant_layers_opt_in_gates_path_and_stats(smoke):
     cfg, params, toks, h_ref = smoke
-    rc = _rc("int8", quant_layers=("attn.*",))
+    rc = dataclasses.replace(RC32, quant_policy="attn.*=int8,*=bf16")
     h, _, _, tree = forward_with_stats(cfg, rc, params, {"tokens": toks})
     names = {e.name for _, e in tree_entries(tree)}
     assert names == {"attn.q", "attn.k", "attn.v", "attn.o"}
@@ -145,7 +146,7 @@ def test_prequant_surgery_matches_dynamic(bits, kind, smoke):
     integers; only the dequant epilogue's float op order may differ (≤1 ulp
     observed)."""
     cfg, params, toks, _ = smoke
-    rcq = _rc(kind, gemm_mode="prequant")
+    rcq = _rc(kind, mode="prequant")
     qparams = apply_surgery(cfg, rcq, params)
     # selected leaves got packed: int4/int2 kernels shrink along K
     qk = qparams["groups"][0]["k0"]["attn"]["wq"]["qkernel"]
