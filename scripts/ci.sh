@@ -30,6 +30,13 @@ echo "== QuantPolicy suite (mixed precision + deprecation gate)"
 # tests assert the warning with pytest.warns).
 python -m pytest -x -q -p no:randomly tests/test_policy.py
 
+echo "== serve smoke (paged KV + chunked-prefill scheduler)"
+# the kv_layout A/B conformance + allocator property suite runs before the
+# monolithic pass so a broken page mapping fails fast (same determinism
+# flags: fixed seeds, no test shuffling, derandomized hypothesis)
+python -m pytest -x -q -p no:randomly tests/test_paged.py
+python benchmarks/serve_bench.py --fast
+
 echo "== tier-1 tests"
 # -p no:randomly: if pytest-randomly is ever installed it would shuffle
 # test order and reseed per test — the conformance suite pins its own seeds

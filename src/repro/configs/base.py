@@ -148,6 +148,16 @@ class RunConfig:
     microbatches: int = 1
     # serving
     kv_cache_dtype: str = "bfloat16" # bfloat16 | int8
+    # KV cache layout: "dense" = per-slot (batch, capacity) buffers (legacy,
+    # bit-exact A/B baseline); "paged" = fixed pool of block_size-token pages
+    # indexed through per-slot block tables (serve/cache.py manager).
+    kv_layout: str = "dense"         # dense | paged
+    block_size: int = 16             # tokens per KV page (paged layout)
+    # chunked-prefill scheduler (serve/scheduler.py): prompts are split into
+    # prefill_chunk-token chunks and packed with decode rows into one jitted
+    # mixed step of static width max(prefill_chunk, 1) per tick.
+    prefill_chunk: int = 16
+    token_budget: int = 0            # per-tick scheduled-token cap (0 -> rows*chunk)
     # sharding rule overrides: logical axis -> mesh axis name(s) or None
     sharding_overrides: dict = field(default_factory=dict)
 

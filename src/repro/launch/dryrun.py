@@ -159,7 +159,36 @@ def build_cell(arch: str, shape, rc: RunConfig):
             {"donate_argnums": (1,), "out_shardings": (shd(caches_sh), None)},
         )
 
-    # decode: (params, caches, tokens (B,1), pos scalar)
+    # decode: for attention stacks the serving tick is the scheduler's mixed
+    # prefill+decode step — (params, caches, tokens (B,W), pos (B,), lens
+    # (B,), tables) — so the cost cells price what production actually runs
+    # per tick (chunked prefill packed with decode rows). SSM/hybrid mixers
+    # keep the legacy single-token decode (state not chunk-resumable).
+    if cfg.family not in ("ssm", "hybrid") and not cfg.is_encoder:
+        from ..parallel.sharding import sharding_for
+        from ..serve import build_mixed_step
+
+        B, W = shape.global_batch, max(rc.prefill_chunk, 1)
+
+        def row_sh(shp, axes):
+            return jax.ShapeDtypeStruct(
+                shp, jnp.int32, sharding=sharding_for(axes, shp)
+            )
+
+        tokens_sh = row_sh((B, W), ("batch", "seq"))
+        pos_sh = row_sh((B,), ("batch",))
+        lens_sh = row_sh((B,), ("batch",))
+        if rc.kv_layout == "paged":
+            tables_sh = row_sh((B, shape.seq_len // rc.block_size), ("batch", None))
+        else:
+            tables_sh = None
+        return (
+            build_mixed_step(cfg, rc),
+            (params_sh, caches_sh, tokens_sh, pos_sh, lens_sh, tables_sh),
+            {"donate_argnums": (1,), "out_shardings": (shd(caches_sh), None)},
+        )
+
+    # legacy decode: (params, caches, tokens (B,1), pos scalar)
     tokens_abs = specs.get("tokens") or jax.ShapeDtypeStruct(
         (shape.global_batch, 1), jnp.int32
     )
@@ -190,10 +219,26 @@ def _cost_dict(cost) -> dict:
 
 
 def run_cell(
-    arch: str, shape, *, multi_pod: bool, out_dir: str | None = None, optimized: bool = False
+    arch: str,
+    shape,
+    *,
+    multi_pod: bool,
+    out_dir: str | None = None,
+    optimized: bool = False,
+    kv_layout: str | None = None,
+    block_size: int | None = None,
 ) -> dict:
+    import dataclasses
+
     cfg = get_config(arch)
     rc = cell_runconfig(arch, shape, optimized=optimized)
+    # the paged layout only applies to the mixed-step decode cells (prefill
+    # cells and SSM/hybrid decodes run the legacy scalar-position builders)
+    if shape.kind == "decode" and cfg.family not in ("ssm", "hybrid"):
+        if kv_layout is not None:
+            rc = dataclasses.replace(rc, kv_layout=kv_layout)
+        if block_size is not None:
+            rc = dataclasses.replace(rc, block_size=block_size)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     name = f"{arch}×{shape.name}×{'multi' if multi_pod else 'single'}"
@@ -264,6 +309,10 @@ def main():
     ap.add_argument("--multi-pod", action="store_true", help="2×16×16 mesh")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--optimized", action="store_true", help="§Perf settings")
+    ap.add_argument("--kv-layout", default=None, choices=["dense", "paged"],
+                    help="KV layout for the mixed-step decode cells")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged KV page size (tokens)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--keep-going", action="store_true", default=True)
     args = ap.parse_args()
@@ -282,7 +331,8 @@ def main():
             label = f"{arch}×{shape.name}×{'multi' if multi else 'single'}"
             try:
                 row = run_cell(arch, shape, multi_pod=multi, out_dir=args.out,
-                               optimized=args.optimized)
+                               optimized=args.optimized, kv_layout=args.kv_layout,
+                               block_size=args.block_size)
                 rows.append(row)
                 print(
                     f"[ok]   {label}: peak {row['peak_bytes_per_chip']/1e9:.2f} GB/chip, "

@@ -1,7 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the continuous-batching engine on synthetic prompts and reports
-throughput/latency; the same Engine drives examples/serve_lm.py.
+Spins up the block-managed, continuously-batched Scheduler (chunked prefill
++ decode packed into one mixed step per tick) on synthetic prompts and
+reports throughput/latency; SSM/hybrid stacks fall back to the legacy dense
+Engine (``--engine legacy`` forces it). The same engines drive
+examples/serve_lm.py and benchmarks/serve_bench.py.
 """
 
 from __future__ import annotations
@@ -15,7 +18,7 @@ import numpy as np
 from ..configs.base import RunConfig, get_config
 from ..models import init
 from ..parallel.sharding import use_mesh
-from ..serve import Engine, Request
+from ..serve import Engine, Request, Scheduler
 from .mesh import make_local_mesh
 
 
@@ -27,6 +30,18 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--engine", default="scheduler", choices=["scheduler", "legacy"],
+                    help="scheduler = chunked-prefill mixed step; legacy = "
+                         "dense slot pool with one-shot B=1 prefill")
+    ap.add_argument("--kv-layout", default="dense", choices=["dense", "paged"])
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="scheduler prompt chunk width (mixed-step columns)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-tick scheduled-token cap (0 = rows*chunk)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged pool size (0 = dense-equivalent)")
     ap.add_argument("--kv-dtype", default="bfloat16", choices=["bfloat16", "int8"])
     ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"],
                     help="uniform precision (shorthand for --policy '*=<kind>')")
@@ -47,10 +62,23 @@ def main(argv=None):
     rc = RunConfig(
         dtype=dtype, param_dtype=dtype, remat="none",
         kv_cache_dtype=args.kv_dtype,
+        kv_layout=args.kv_layout, block_size=args.block_size,
+        prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
         quant_policy=load_policy(args.policy) or f"*={args.gemm_backend}",
     )
     mesh = make_local_mesh(args.data, args.model)
     rng = np.random.default_rng(args.seed)
+
+    use_scheduler = args.engine == "scheduler" and cfg.family not in ("ssm", "hybrid")
+    if args.engine == "scheduler" and not use_scheduler:
+        print(f"[serve] {cfg.family} mixer state is not chunk-resumable — "
+              "falling back to the legacy engine")
+    if not use_scheduler and rc.kv_layout != "dense":
+        # the legacy engine only speaks the dense slot layout
+        import dataclasses
+
+        print("[serve] legacy engine: forcing --kv-layout dense")
+        rc = dataclasses.replace(rc, kv_layout="dense")
 
     with use_mesh(mesh):
         params = init(cfg, rc, jax.random.PRNGKey(args.seed))
@@ -60,11 +88,19 @@ def main(argv=None):
         from ..quant import apply_surgery
 
         params = apply_surgery(cfg, rc, params)
-        eng = Engine(
-            cfg, rc, params,
-            capacity=args.capacity, max_batch=args.max_batch,
-            temperature=args.temperature, seed=args.seed,
-        )
+        if use_scheduler:
+            eng = Scheduler(
+                cfg, rc, params,
+                capacity=args.capacity, max_batch=args.max_batch,
+                num_pages=args.num_pages or None,
+                temperature=args.temperature, seed=args.seed,
+            )
+        else:
+            eng = Engine(
+                cfg, rc, params,
+                capacity=args.capacity, max_batch=args.max_batch,
+                temperature=args.temperature, seed=args.seed,
+            )
         for rid in range(args.requests):
             prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
             eng.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
@@ -73,8 +109,12 @@ def main(argv=None):
         dt = time.perf_counter() - t0
 
     toks = sum(len(r.out) for r in done)
-    print(f"[serve] {args.arch}: {len(done)} requests, {toks} tokens "
+    label = "scheduler" if use_scheduler else "legacy"
+    print(f"[serve] {args.arch} ({label}, kv_layout={rc.kv_layout}): "
+          f"{len(done)} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    if use_scheduler:
+        print(f"  cache: {eng.cache_stats()}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

@@ -10,9 +10,11 @@ from .model import (
     model_flops,
     param_sharding,
 )
+from .attention import KVView
 from .transformer import forward, init_caches, lm_logits, model_spec, plan_groups
 
 __all__ = [
+    "KVView",
     "abstract_params",
     "active_params",
     "count_params",

@@ -1,14 +1,25 @@
 """Attention variants: GQA (+qk_norm, RoPE/M-RoPE, SWA) and MLA (DeepSeek-V2).
 
-Decode uses a pre-allocated KV cache of static capacity (the assigned decode
-shapes fix capacity = seq_len); MLA caches the *compressed* kv latent and
-decodes in the absorbed form (no decompression — the production DeepSeek
-serving path). KV caches optionally store int8 with per-(token, head) scales
-(``kv_dtype="int8"``) — the tuGEMM low-precision thesis applied to cache
-traffic.
+Decode uses a pre-allocated KV cache in one of two layouts:
+
+- **dense** (legacy): per-slot ``(batch, capacity)`` buffers, scalar write
+  position (the whole pool advances in lock step);
+- **paged**: a fixed pool of ``block_size``-token pages shared by all slots,
+  addressed through per-slot block tables (a :class:`KVView`) — per-row write
+  positions/lengths, so one jitted step can mix prefill chunks and decode
+  rows (serve/scheduler.py) and cache memory scales with live tokens.
+
+MLA caches the *compressed* kv latent and decodes in the absorbed form (no
+decompression — the production DeepSeek serving path). KV caches optionally
+store int8 with per-(token, head) scales (``kv_dtype="int8"``) — the tuGEMM
+low-precision thesis applied to cache traffic. int8 reads are length-masked:
+positions at or beyond the live length dequantize to exact zeros, so slot
+reuse never leaks a previous occupant's stale pages/rows into the view.
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +38,49 @@ __all__ = [
     "init_kv_cache",
     "kv_cache_write",
     "kv_cache_read",
+    "KVView",
 ]
 
 
 # ------------------------------------------------------------------ KV cache
+@dataclass
+class KVView:
+    """Per-row addressing for one mixed prefill+decode step.
+
+    ``pos[b]`` is row b's first write position (tokens already in its
+    sequence), ``lens[b]`` how many of the step's S columns are real tokens
+    (0 = row idle this tick; its writes are dropped and its outputs unread).
+    ``tables[b]`` maps block index -> page id in the pooled cache for the
+    paged layout (None = dense per-row addressing). ``block_size`` and
+    ``layout`` are static (trace-time) attributes."""
+
+    pos: jnp.ndarray                  # (B,) int32
+    lens: jnp.ndarray                 # (B,) int32
+    tables: jnp.ndarray | None = None  # (B, max_blocks) int32 page ids
+    block_size: int = 16
+    layout: str = "dense"             # dense | paged
+
+    def tree_flatten(self):
+        return (self.pos, self.lens, self.tables), (self.block_size, self.layout)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], aux[1])
+
+    @property
+    def kv_len(self) -> jnp.ndarray:
+        """Per-row live length after this step's writes."""
+        return self.pos + self.lens
+
+
+jax.tree_util.register_pytree_node(
+    KVView, KVView.tree_flatten, KVView.tree_unflatten
+)
+
+
+def paged_view_capacity(view: KVView) -> int:
+    """Token capacity of the contiguous per-row view a block table spans."""
+    return view.tables.shape[1] * view.block_size
 def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
     """Per-layer attention cache (unstacked; caller stacks per layer group)."""
     hd = cfg.resolved_head_dim
@@ -59,33 +109,117 @@ def _quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.clip(q, -128, 127).astype(jnp.int8), scale
 
 
-def kv_cache_write(cache: dict, names: tuple[str, str], new: tuple, pos) -> dict:
-    """Write one token's k/v (B, 1, ...) at position ``pos`` (static capacity)."""
-    out = dict(cache)
-    for name, val in zip(names, new):
-        buf = cache[name]
-        if buf.dtype == jnp.int8:
-            q, s = _quantize_kv(val)
-            out[name] = jax.lax.dynamic_update_slice_in_dim(buf, q, pos, axis=1)
-            sk = name + "_scale"
-            out[sk] = jax.lax.dynamic_update_slice_in_dim(
-                cache[sk], s.astype(jnp.float32), pos, axis=1
-            )
-        else:
-            out[name] = jax.lax.dynamic_update_slice_in_dim(
-                buf, val.astype(buf.dtype), pos, axis=1
-            )
+def _scatter_targets(view: KVView, B: int, S: int, capacity: int):
+    """Per-token write coordinates for a :class:`KVView` step.
+
+    Returns (rows, tp) index arrays of shape (B, S): dense rows/positions,
+    with every padded column (col >= lens[row]) redirected out of bounds so
+    ``.at[...].set(mode="drop")`` discards it."""
+    cols = jnp.arange(S, dtype=jnp.int32)
+    tp = view.pos[:, None] + cols[None, :]                     # (B, S)
+    live = cols[None, :] < view.lens[:, None]
+    tp = jnp.where(live, tp, capacity)                         # OOB -> dropped
+    rows = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, S))
+    return rows, tp
+
+
+def _paged_targets(view: KVView, B: int, S: int, num_rows: int):
+    """(page, offset) per token for the paged pool; padded columns land on
+    the trash page (the pool's last row, never read)."""
+    bs = view.block_size
+    cols = jnp.arange(S, dtype=jnp.int32)
+    tp = view.pos[:, None] + cols[None, :]                     # (B, S)
+    live = cols[None, :] < view.lens[:, None]
+    max_blocks = view.tables.shape[1]
+    blk = jnp.clip(tp // bs, 0, max_blocks - 1)
+    rows = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, S))
+    page = view.tables[rows, blk]                              # (B, S)
+    trash = num_rows - 1
+    page = jnp.where(live & (tp < max_blocks * bs), page, trash)
+    return page, tp % bs
+
+
+def _write_one(cache: dict, out: dict, name: str, val, pos, view: KVView | None):
+    """Write ``val`` (B, S, ...) into one cache buffer (plus its scale)."""
+    buf = cache[name]
+    if buf.dtype == jnp.int8:
+        q, s = _quantize_kv(val)
+        vals = [(name, q), (name + "_scale", s.astype(jnp.float32))]
+    else:
+        vals = [(name, val.astype(buf.dtype))]
+    B, S = val.shape[:2]
+    for n, v in vals:
+        dst = cache[n]
+        if view is None:
+            out[n] = jax.lax.dynamic_update_slice_in_dim(dst, v, pos, axis=1)
+        elif view.tables is None:  # dense layout, per-row positions
+            rows, tp = _scatter_targets(view, B, S, dst.shape[1])
+            out[n] = dst.at[rows, tp].set(v, mode="drop")
+        else:                      # paged pool: (pages+1, block_size, ...)
+            page, off = _paged_targets(view, B, S, dst.shape[0])
+            out[n] = dst.at[page, off].set(v, mode="drop")
     return out
 
 
-def kv_cache_read(cache: dict, name: str, compute_dtype) -> jnp.ndarray:
+def kv_cache_write(
+    cache: dict, names: tuple[str, str], new: tuple, pos, *, view: KVView | None = None
+) -> dict:
+    """Write a (B, S, ...) span of k/v tokens.
+
+    Legacy path (``view=None``): all rows share the scalar write position
+    ``pos`` (dynamic_update_slice over a static-capacity buffer). With a
+    :class:`KVView`, each row writes ``lens[b]`` tokens at its own
+    ``pos[b]`` — scattered into the dense buffer or through the block table
+    into the page pool; padded columns are dropped."""
+    out = dict(cache)
+    for name, val in zip(names, new):
+        out = _write_one(cache, out, name, val, pos, view)
+    return out
+
+
+def _mask_dead(x: jnp.ndarray, kv_len) -> jnp.ndarray:
+    """Zero every position at or beyond the live length (scalar or (B,))."""
+    if kv_len is None:
+        return x
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    live = pos[None, :] < (kv_len[:, None] if kv_len.ndim == 1 else kv_len)
+    return jnp.where(live.reshape(live.shape + (1,) * (x.ndim - 2)), x, 0)
+
+
+def kv_cache_read(
+    cache: dict,
+    name: str,
+    compute_dtype,
+    *,
+    kv_len=None,
+    view: KVView | None = None,
+) -> jnp.ndarray:
+    """Materialize one cache buffer as a contiguous (B, capacity, ...) view.
+
+    ``kv_len`` (scalar or per-row (B,)) length-masks the result: dead
+    positions come back as exact zeros, so the int8 dequant never exposes a
+    previous occupant's stale rows/pages and a fresh page needs no zeroing.
+    With a paged :class:`KVView`, pages are gathered through the block table
+    into a contiguous view of ``max_blocks * block_size`` tokens per row."""
+    if view is not None and view.tables is not None:
+        pool = cache[name]                                  # (P+1, bs, ...)
+        B = view.tables.shape[0]
+        gathered = pool[view.tables]                        # (B, MB, bs, ...)
+        buf = gathered.reshape((B, paged_view_capacity(view)) + pool.shape[2:])
+        if pool.dtype == jnp.int8:
+            s = cache[name + "_scale"][view.tables].reshape(
+                B, paged_view_capacity(view)
+            )
+            deq = buf.astype(jnp.float32) * s.reshape(s.shape + (1,) * (buf.ndim - 2))
+            return _mask_dead(deq, kv_len).astype(compute_dtype)
+        return _mask_dead(buf, kv_len).astype(compute_dtype)
     buf = cache[name]
     if buf.dtype == jnp.int8:
         s = cache[name + "_scale"]
-        return (
-            buf.astype(jnp.float32) * s.reshape(s.shape + (1,) * (buf.ndim - 2))
-        ).astype(compute_dtype)
-    return buf.astype(compute_dtype)
+        deq = buf.astype(jnp.float32) * s.reshape(s.shape + (1,) * (buf.ndim - 2))
+        return _mask_dead(deq, kv_len).astype(compute_dtype)
+    return _mask_dead(buf, kv_len).astype(compute_dtype)
 
 
 # ----------------------------------------------------------------------- GQA
@@ -112,6 +246,7 @@ def gqa_attention(
     backend: GemmBackend,
     cache: dict | None = None,
     cache_pos=None,                 # scalar write position (decode)
+    kv_view: KVView | None = None,  # per-row addressing (mixed steps / paged)
     is_global: bool = True,         # False -> sliding window
     chunk: int = 1024,
 ) -> tuple[jnp.ndarray, dict | None]:
@@ -138,18 +273,25 @@ def gqa_attention(
 
     window = None if is_global else cfg.sliding_window
     if cache is not None:
-        cache = kv_cache_write(cache, ("k", "v"), (k, v), cache_pos)
-        k_full = kv_cache_read(cache, "k", x.dtype)
-        v_full = kv_cache_read(cache, "v", x.dtype)
-        capacity = k_full.shape[1]
+        if kv_view is not None:
+            cache = kv_cache_write(cache, ("k", "v"), (k, v), None, view=kv_view)
+            kv_len = kv_view.kv_len                            # (B,)
+            k_full = kv_cache_read(cache, "k", x.dtype, kv_len=kv_len, view=kv_view)
+            v_full = kv_cache_read(cache, "v", x.dtype, kv_len=kv_len, view=kv_view)
+            q_offset = kv_view.pos                             # (B,)
+        else:
+            cache = kv_cache_write(cache, ("k", "v"), (k, v), cache_pos)
+            capacity = cache["k"].shape[1]
+            kv_len = jnp.minimum(jnp.asarray(cache_pos, jnp.int32) + S, capacity)
+            k_full = kv_cache_read(cache, "k", x.dtype, kv_len=kv_len)
+            v_full = kv_cache_read(cache, "v", x.dtype, kv_len=kv_len)
+            q_offset = cache_pos
         out = blockwise_attention(
             q,
             k_full,
             v_full,
-            q_offset=cache_pos,
-            kv_len=jnp.minimum(
-                jnp.asarray(cache_pos, jnp.int32) + S, capacity
-            ),
+            q_offset=q_offset,
+            kv_len=kv_len,
             causal=cfg.causal,
             window=window,
             chunk=chunk,
@@ -188,6 +330,7 @@ def mla_attention(
     backend: GemmBackend,
     cache: dict | None = None,
     cache_pos=None,
+    kv_view: KVView | None = None,
     chunk: int = 1024,
     **_unused,
 ) -> tuple[jnp.ndarray, dict | None]:
@@ -210,15 +353,21 @@ def mla_attention(
                        p["w_uk"]["kernel"].astype(jnp.float32)).astype(x.dtype)
     q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)          # (B,S,h,lora+rope)
 
-    if cache is not None:
+    if cache is not None and kv_view is not None:
+        cache = kv_cache_write(cache, ("ckv", "kr"), (ckv, k_rope), None, view=kv_view)
+        kv_len = kv_view.kv_len
+        ckv_full = kv_cache_read(cache, "ckv", x.dtype, kv_len=kv_len, view=kv_view)
+        kr_full = kv_cache_read(cache, "kr", x.dtype, kv_len=kv_len, view=kv_view)
+        q_offset = kv_view.pos
+    elif cache is not None:
         cache = kv_cache_write(
             cache, ("ckv", "kr"), (ckv, k_rope), cache_pos
         )
-        ckv_full = kv_cache_read(cache, "ckv", x.dtype)
-        kr_full = kv_cache_read(cache, "kr", x.dtype)
         kv_len = jnp.minimum(
-            jnp.asarray(cache_pos, jnp.int32) + S, ckv_full.shape[1]
+            jnp.asarray(cache_pos, jnp.int32) + S, cache["ckv"].shape[1]
         )
+        ckv_full = kv_cache_read(cache, "ckv", x.dtype, kv_len=kv_len)
+        kr_full = kv_cache_read(cache, "kr", x.dtype, kv_len=kv_len)
         q_offset = cache_pos
     else:
         ckv_full, kr_full, kv_len, q_offset = ckv, k_rope, None, 0

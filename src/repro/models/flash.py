@@ -9,11 +9,14 @@ autodiff through the forward scan saves every chunk's (B,H,Sq,C) probability
 tensor, which restores the O(S²) footprint the whole design exists to avoid
 (measured: ~60 GB/layer-loop of pure p-tensor traffic on the train_4k cells).
 
-One implementation covers training (full seq), prefill, and single-token
-decode (Sq=1 against a long cache): GQA/MQA by chunk-local KV head
-repetition, causal/sliding-window/encoder masking by position arithmetic,
-valid-length masking for caches. The cached-decode path (q_offset/kv_len
-dynamic) skips the custom VJP — serving never differentiates.
+One implementation covers training (full seq), prefill, single-token
+decode (Sq=1 against a long cache), and the serving scheduler's mixed
+prefill+decode step: GQA/MQA by chunk-local KV head repetition,
+causal/sliding-window/encoder masking by position arithmetic, valid-length
+masking for caches. ``q_offset``/``kv_len`` accept per-row (B,) vectors so
+rows of one step may sit at different positions/lengths (chunked prefill
+packed with decode rows). The cached-decode path (q_offset/kv_len dynamic)
+skips the custom VJP — serving never differentiates.
 """
 
 from __future__ import annotations
@@ -39,12 +42,34 @@ def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
 
 
 def _chunk_mask(q_pos, k_pos, valid_len, causal, window):
-    mask = k_pos[None, :] < valid_len
+    """Visibility mask over one KV chunk.
+
+    ``q_pos`` is (Sq,) or, for per-row offsets (mixed prefill+decode steps),
+    (B, Sq); ``valid_len`` is a scalar or a per-row (B,) vector. Returns
+    (Sq, C) in the legacy scalar case, else (B, Sq, C)."""
+    q_pos = jnp.asarray(q_pos)
+    valid_len = jnp.asarray(valid_len)
+    if q_pos.ndim == 1 and valid_len.ndim == 0:
+        mask = k_pos[None, :] < valid_len
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        return mask  # (Sq, C)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]          # (B|1, Sq)
+    vl = valid_len if valid_len.ndim == 1 else valid_len[None]  # (B|1,)
+    mask = k_pos[None, None, :] < vl[:, None, None]
     if causal:
-        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        mask = mask & (k_pos[None, None, :] <= qp[:, :, None])
     if window is not None:
-        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
-    return mask  # (Sq, C)
+        mask = mask & (qp[:, :, None] - k_pos[None, None, :] < window)
+    return mask  # (B, Sq, C)
+
+
+def _apply_mask(s, mask):
+    """``s`` is (B, H, Sq, C); ``mask`` is (Sq, C) or (B, Sq, C)."""
+    m = mask[None, None, :, :] if mask.ndim == 2 else mask[:, None, :, :]
+    return jnp.where(m, s, NEG_INF)
 
 
 def _fwd_scan(q, k, v, q_offset, valid_len, causal, window, chunk, softcap):
@@ -61,7 +86,10 @@ def _fwd_scan(q, k, v, q_offset, valid_len, causal, window, chunk, softcap):
     n_chunks = k.shape[1] // chunk
 
     qf = q.astype(jnp.float32) * scale
-    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    q_pos = (q_off[:, None] if q_off.ndim == 1 else q_off) + jnp.arange(
+        Sq, dtype=jnp.int32
+    )
 
     m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, H, Sq), jnp.float32)
@@ -80,7 +108,7 @@ def _fwd_scan(q, k, v, q_offset, valid_len, causal, window, chunk, softcap):
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         mask = _chunk_mask(q_pos, k_pos, valid_len, causal, window)
-        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        s = _apply_mask(s, mask)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -203,9 +231,13 @@ def _decode_direct(q, k, v, q_offset, valid_len, causal, window, softcap):
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     k_pos = jnp.arange(Skv, dtype=jnp.int32)
-    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq, dtype=jnp.int32)
-    mask = _chunk_mask(q_pos, k_pos, valid_len, causal, window)    # (Sq, Skv)
-    s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    q_pos = (q_off[:, None] if q_off.ndim == 1 else q_off) + jnp.arange(
+        Sq, dtype=jnp.int32
+    )
+    mask = _chunk_mask(q_pos, k_pos, valid_len, causal, window)  # (Sq|B,Sq, Skv)
+    m = mask[None, None, None, :, :] if mask.ndim == 2 else mask[:, None, None, :, :]
+    s = jnp.where(m, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum(
         "bkrqc,bckd->bqkrd", p.astype(v.dtype), v,

@@ -28,7 +28,14 @@ from ..configs.base import ModelConfig, RunConfig
 from ..parallel.sharding import ParamSpec, constrain
 from ..quant import capture as stats_capture
 from ..quant.qlinear import GemmBackend, dense
-from .attention import gqa_attention, gqa_spec, init_kv_cache, mla_attention, mla_spec
+from .attention import (
+    KVView,
+    gqa_attention,
+    gqa_spec,
+    init_kv_cache,
+    mla_attention,
+    mla_spec,
+)
 from .layers import embed_lookup, embed_spec, linear_spec, mlp, mlp_spec, rms_norm, rms_norm_spec
 from .moe import moe_ffn, moe_spec
 from .ssm import init_ssm_state, mamba_decode_step, mamba_mixer, mamba_spec
@@ -153,21 +160,58 @@ def backend_from(rc: RunConfig):
 
 
 # -------------------------------------------------------------------- cache
-def _block_cache(cfg: ModelConfig, kind: LayerKind, batch: int, capacity: int, kv_dtype) -> dict:
+def _block_cache(
+    cfg: ModelConfig,
+    kind: LayerKind,
+    batch: int,
+    capacity: int,
+    kv_dtype,
+    *,
+    paged_pool: tuple[int, int] | None = None,   # (num_pages, block_size)
+) -> dict:
     cache: dict = {}
     if kind.mixer in ("gqa", "mla", "hybrid"):
-        cache.update(init_kv_cache(cfg, batch, capacity, kv_dtype))
+        if paged_pool is not None:
+            # the paged KV pool reuses the dense leaf layout with
+            # batch -> pages (+1 trash page for dropped writes) and
+            # capacity -> block_size; one block table addresses every layer
+            pages, bs = paged_pool
+            cache.update(init_kv_cache(cfg, pages + 1, bs, kv_dtype))
+        else:
+            cache.update(init_kv_cache(cfg, batch, capacity, kv_dtype))
     if kind.mixer in ("ssm", "hybrid"):
         cache.update(init_ssm_state(cfg, batch))
     return cache
 
 
-def init_caches(cfg: ModelConfig, rc: RunConfig, batch: int, capacity: int):
+def init_caches(
+    cfg: ModelConfig,
+    rc: RunConfig,
+    batch: int,
+    capacity: int,
+    *,
+    num_pages: int | None = None,
+):
+    """Stacked per-group cache trees.
+
+    ``rc.kv_layout="dense"``: KV leaves are (layers, batch, capacity, ...).
+    ``rc.kv_layout="paged"``: KV leaves become page pools
+    (layers, num_pages+1, block_size, ...) shared by all slots and indexed
+    through a block table (models.attention.KVView); the trailing trash page
+    swallows masked writes. SSM state stays dense per slot (no seq axis).
+    ``num_pages`` defaults to the dense equivalent batch*ceil(cap/bs)."""
     kv_dtype = jnp.int8 if rc.kv_cache_dtype == "int8" else jnp.dtype(rc.dtype)
+    paged_pool = None
+    if rc.kv_layout == "paged":
+        bs = rc.block_size
+        pages = num_pages if num_pages is not None else batch * (-(-capacity // bs))
+        paged_pool = (pages, bs)
     out = []
     for g in plan_groups(cfg):
         blocks = {
-            f"k{j}": _block_cache(cfg, kind, batch, capacity, kv_dtype)
+            f"k{j}": _block_cache(
+                cfg, kind, batch, capacity, kv_dtype, paged_pool=paged_pool
+            )
             for j, kind in enumerate(g.kinds)
         }
         out.append(
@@ -187,6 +231,7 @@ def _apply_block(
     backend: GemmBackend,
     cache: dict | None,
     cache_pos,
+    kv_view: KVView | None,
     chunk: int,
     want_state: bool,
 ):
@@ -198,12 +243,14 @@ def _apply_block(
         with stats_capture.frame() as fr:
             x, new_cache, aux, _ = _apply_block_inner(
                 cfg, kind, p, x, positions, backend=backend, cache=cache,
-                cache_pos=cache_pos, chunk=chunk, want_state=want_state,
+                cache_pos=cache_pos, kv_view=kv_view, chunk=chunk,
+                want_state=want_state,
             )
         return x, new_cache, aux, stats_capture.as_tree(fr)
     return _apply_block_inner(
         cfg, kind, p, x, positions, backend=backend, cache=cache,
-        cache_pos=cache_pos, chunk=chunk, want_state=want_state,
+        cache_pos=cache_pos, kv_view=kv_view, chunk=chunk,
+        want_state=want_state,
     )
 
 
@@ -217,6 +264,7 @@ def _apply_block_inner(
     backend: GemmBackend,
     cache: dict | None,
     cache_pos,
+    kv_view: KVView | None,
     chunk: int,
     want_state: bool,
 ):
@@ -232,7 +280,7 @@ def _apply_block_inner(
         y_attn, kv_out = attn_fn(
             cfg, p["attn"], h, positions,
             backend=backend, cache=kv_cache, cache_pos=cache_pos,
-            is_global=kind.is_global, chunk=chunk,
+            kv_view=kv_view, is_global=kind.is_global, chunk=chunk,
         )
         if kv_out is not None:
             new_cache.update(kv_out)
@@ -286,13 +334,17 @@ def forward(
     *,
     caches=None,
     cache_pos=None,
+    kv_view: KVView | None = None,
 ):
     """Returns (hidden (B,S,D), new_caches, aux_loss).
 
     batch: {"tokens": (B,S) int32} or {"embeds": (B,S,F)};
            optional "positions" (B,S) or (3,B,S) for M-RoPE.
     caches: output of init_caches (stacked per group) or None.
-    cache_pos: scalar int32 write offset (required with caches).
+    cache_pos: int32 write offset (required with caches) — scalar, or a
+           per-row (B,) vector when rows sit at different positions.
+    kv_view: per-row block-table addressing for the mixed prefill+decode
+           step (models.attention.KVView); None = legacy dense addressing.
     """
     backend = backend_from(rc)
     pol = getattr(backend, "policy", None)
@@ -316,6 +368,8 @@ def forward(
         positions = batch["positions"]
     else:
         base = jnp.asarray(0 if cache_pos is None else cache_pos, jnp.int32)
+        if base.ndim == 1:  # per-row offsets (mixed step)
+            base = base[:, None]
         positions = base + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = constrain(x, "batch", "seq", "act_embed")
 
@@ -335,7 +389,7 @@ def forward(
             x, nc, a, bs = _apply_block(
                 cfg, kind, p[f"k{j}"], x, positions,
                 backend=backend, cache=c_j, cache_pos=cache_pos,
-                chunk=rc.attn_chunk, want_state=want_state,
+                kv_view=kv_view, chunk=rc.attn_chunk, want_state=want_state,
             )
             if nc is not None:
                 ncache[f"k{j}"] = nc

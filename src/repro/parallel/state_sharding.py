@@ -96,14 +96,37 @@ _CACHE_AXES = {
 }
 
 
-def abstract_caches(cfg: ModelConfig, rc: RunConfig, batch: int, capacity: int):
-    return jax.eval_shape(lambda: init_caches(cfg, rc, batch, capacity))
+def abstract_caches(
+    cfg: ModelConfig, rc: RunConfig, batch: int, capacity: int, *, num_pages=None
+):
+    return jax.eval_shape(
+        lambda: init_caches(cfg, rc, batch, capacity, num_pages=num_pages)
+    )
+
+
+# paged layout: one KV leaf is a page pool (layers, pages+1, block, ...) —
+# pages replicate (any slot's block table must reach any page from its data
+# shard) and the pool shards on heads, the vLLM-style TP cache split
+_PAGED_CACHE_AXES = {
+    "k": ("layers", None, None, "cache_heads", None),
+    "v": ("layers", None, None, "cache_heads", None),
+    "k_scale": ("layers", None, None),
+    "v_scale": ("layers", None, None),
+    "ckv": ("layers", None, None, None),
+    "kr": ("layers", None, None, None),
+    "ckv_scale": ("layers", None, None),
+    "kr_scale": ("layers", None, None),
+}
 
 
 def cache_sharding(cfg: ModelConfig, rc: RunConfig, caches_abs):
+    axes_map = dict(_CACHE_AXES)
+    if rc.kv_layout == "paged":
+        axes_map.update(_PAGED_CACHE_AXES)
+
     def one(path, leaf):
         name = str(getattr(path[-1], "key", path[-1]))
-        axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
+        axes = axes_map.get(name, (None,) * leaf.ndim)
         return sharding_for(axes, leaf.shape)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(caches_abs)

@@ -1,5 +1,24 @@
-"""Serving substrate: prefill/decode step builders + continuous-batching engine."""
+"""Serving substrate.
 
-from .engine import Engine, Request, SlotMeter, build_decode, build_prefill, sample
+- serve.cache: paged KV pool block manager (free-list pages, block tables)
+- serve.scheduler: chunked-prefill + decode mixed-step Scheduler (the
+  block-managed, continuously-batched engine)
+- serve.engine: legacy dense-slot Engine (bit-exact A/B baseline; SSM/hybrid)
+"""
 
-__all__ = ["Engine", "Request", "SlotMeter", "build_decode", "build_prefill", "sample"]
+from .cache import BlockManager, num_pages_for
+from .engine import Engine, build_decode, build_prefill
+from .scheduler import Request, Scheduler, SlotMeter, build_mixed_step, sample
+
+__all__ = [
+    "BlockManager",
+    "num_pages_for",
+    "Engine",
+    "Request",
+    "Scheduler",
+    "SlotMeter",
+    "build_decode",
+    "build_mixed_step",
+    "build_prefill",
+    "sample",
+]

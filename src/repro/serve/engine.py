@@ -1,41 +1,35 @@
-"""Batched serving engine: slot-based KV/SSM cache, prefill + decode steps,
-continuous batching.
+"""Legacy dense-slot serving engine: one-shot B=1 prefill + lock-step decode.
 
-The two jitted step functions are also what the multi-pod dry-run lowers for
-the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells:
+This is the baseline the block-managed scheduler (serve.scheduler) was
+refactored out of, kept for bit-exact A/B and as the serving path for
+SSM/hybrid stacks (whose mixer state is not yet chunk-resumable). Its two
+jitted step builders also back the multi-pod dry-run decode/prefill cells:
 
 - ``build_prefill(cfg, rc)``: (params, caches, batch) -> (caches, last_logits)
 - ``build_decode(cfg, rc)``:  (params, caches, tokens, pos) -> (caches, logits)
 
-The engine layers continuous batching on top: a fixed pool of ``max_batch``
-slots, each slot holding one request's cache rows; finished slots are
-refilled from the admission queue by writing the new request's prefilled
-cache rows into the pool (a batch-axis dynamic_update_slice — no pool-wide
-recompute). KV caches optionally store int8 (``rc.kv_cache_dtype``).
+Known structural limits (the scheduler's raison d'être): admission runs the
+whole prompt as a separate B=1 prefill — a jit cache entry per distinct
+prompt length and a pool-wide stall per admission (head-of-line blocking);
+the dense pool reserves ``max_batch × capacity`` cache tokens regardless of
+occupancy; and all slots share one decode position counter.
 
 With ``track_energy=True`` (quant backends) the step functions are built
-``with_stats``: every quantized GEMM's tuGEMM cycle counts come back from
-the same jitted call as a stats tree (quant.capture), and the engine keeps
-**per-slot meters** across prefill and decode — prefill cycles are charged
-to the admitted request (its prefill runs on a B=1 batch), each decode
-step's pool-wide cycles are split evenly across the active slots (the
-GEMM's M axis is the slot pool; per-row cycle attribution does not exist in
-the hardware, which drains the max over rows — documented approximation).
-``core.report.slot_energy`` maps a meter's cycles onto the paper's 16×16
-evaluation unit for Joules/seconds per request."""
+``with_stats`` and the engine keeps per-slot :class:`SlotMeter`s — prefill
+cycles charged exactly (B=1), decode steps via ``add_decode_share`` (every
+active row decodes one token, so the even split IS active-token weighting
+here; see serve.scheduler for the general rule)."""
 
 from __future__ import annotations
-
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunConfig
-from ..core.report import slot_energy
 from ..models import forward, init_caches, lm_logits
 from ..quant import capture as stats_capture
 from ..quant.capture import tree_totals_by_bits
+from .scheduler import Request, SlotMeter, sample
 
 __all__ = [
     "build_prefill",
@@ -86,84 +80,6 @@ def build_decode(cfg: ModelConfig, rc: RunConfig, *, with_stats: bool = False):
     return decode_stats
 
 
-def sample(key, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int = 32
-    out: list[int] = field(default_factory=list)
-    done: bool = False
-
-
-@dataclass
-class SlotMeter:
-    """Per-request tuGEMM hardware accounting across prefill + decode.
-
-    Cycles are bucketed **per bitwidth**: under a mixed QuantPolicy the
-    int8 attention cycles and int2 MLP cycles of one request run at
-    different clocks and Table-I power points, so they must be kept apart
-    until the final latency/energy conversion."""
-
-    rid: int
-    prompt_tokens: int = 0
-    decode_tokens: int = 0
-    # bits -> cycles; prefill exact ints, decode shares accumulate in float
-    # (a step's pool-wide total divided by the active-slot count is
-    # fractional); rounding happens once at read so the meters stay
-    # conservative: sum over slots == measured pool totals
-    prefill_by_bits: dict = field(default_factory=dict)   # bits -> {variant: int}
-    decode_by_bits: dict = field(default_factory=dict)    # bits -> {variant: float}
-
-    def add_prefill(self, by_bits: dict) -> None:
-        for b, tot in by_bits.items():
-            d = self.prefill_by_bits.setdefault(b, {"serial": 0, "parallel": 0})
-            d["serial"] += tot["serial_cycles"]
-            d["parallel"] += tot["parallel_cycles"]
-
-    def add_decode_share(self, by_bits: dict, active: int) -> None:
-        for b, tot in by_bits.items():
-            d = self.decode_by_bits.setdefault(b, {"serial": 0.0, "parallel": 0.0})
-            d["serial"] += tot["serial_cycles"] / active
-            d["parallel"] += tot["parallel_cycles"] / active
-
-    def cycles_by_bits(self, variant: str = "serial") -> dict[int, int]:
-        out: dict[int, int] = {}
-        for b, d in self.prefill_by_bits.items():
-            out[b] = out.get(b, 0) + d[variant]
-        for b, d in self.decode_by_bits.items():
-            out[b] = out.get(b, 0) + int(round(d[variant]))
-        return out
-
-    def cycles(self, variant: str = "serial") -> int:
-        return sum(self.cycles_by_bits(variant).values())
-
-    def energy(self, variant: str = "serial", *, bits: int | None = None) -> dict:
-        """Latency/energy of this request's GEMM work on the paper's 16×16
-        unit (time-multiplexed across slots). ``bits`` forces the legacy
-        uniform accounting; the default charges each bucket at its own
-        clock/power."""
-        by = self.cycles_by_bits(variant)
-        lat = e_j = 0.0
-        for b, cyc in by.items():
-            l, e = slot_energy(bits if bits is not None else b, variant, cyc)
-            lat += l
-            e_j += e
-        return {
-            "rid": self.rid,
-            "tokens": self.prompt_tokens + self.decode_tokens,
-            "cycles": sum(by.values()),
-            "cycles_by_bits": by,
-            "latency_s": lat,
-            "energy_j": e_j,
-        }
-
-
 class Engine:
     """Synchronous continuous-batching engine over a fixed slot pool.
 
@@ -185,6 +101,11 @@ class Engine:
         seed: int = 0,
         track_energy: bool = False,
     ):
+        if rc.kv_layout != "dense":
+            raise ValueError(
+                "the legacy Engine only speaks the dense slot layout; "
+                "use serve.Scheduler for rc.kv_layout='paged'"
+            )
         self.cfg, self.rc, self.params = cfg, rc, params
         self.capacity, self.max_batch = capacity, max_batch
         self.temperature = temperature
@@ -201,6 +122,7 @@ class Engine:
         self.slots: list[Request | None] = [None] * max_batch
         self.meters: list[SlotMeter | None] = [None] * max_batch
         self.finished_meters: list[SlotMeter] = []
+        self.finished_requests: list[Request] = []
         self.pos = 0          # shared decode position
         self.queue: list[Request] = []
         self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
@@ -219,6 +141,20 @@ class Engine:
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def reset(self) -> None:
+        """Return the engine to an empty pool without recompiling.
+
+        The shared decode position counter restarts at 0; stale cache rows
+        are harmless because every read is length-masked at the live
+        kv_len, so a recycled slot's tail dequantizes to exact zeros."""
+        self.slots = [None] * self.max_batch
+        self.meters = [None] * self.max_batch
+        self.finished_meters = []
+        self.finished_requests = []
+        self.pos = 0
+        self.queue = []
+        self.last_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
@@ -250,6 +186,7 @@ class Engine:
                     # finish here so the request is neither over-generated
                     # nor charged a decode step's cycle share
                     req.done = True
+                    self.finished_requests.append(req)
                     if self.track_energy and self.meters[i] is not None:
                         self.finished_meters.append(self.meters[i])
 
@@ -287,6 +224,7 @@ class Engine:
                 m.add_decode_share(step_by_bits, len(active))
             if len(req.out) >= req.max_new or self.pos >= self.capacity - 1:
                 req.done = True
+                self.finished_requests.append(req)
                 if self.track_energy and self.meters[i] is not None:
                     self.finished_meters.append(self.meters[i])
         return True
@@ -297,7 +235,10 @@ class Engine:
             if not self.step() and not self.queue:
                 break
             steps += 1
-        return [s for s in self.slots if s is not None]
+        # every request that reached done, plus any still in flight — NOT
+        # just the slot residents (slots are recycled by admission)
+        live = [s for s in self.slots if s is not None and not s.done]
+        return self.finished_requests + live
 
     # -------------------------------------------------------------- energy
     def energy_summary(self, variant: str = "serial") -> list[dict]:

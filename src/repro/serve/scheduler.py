@@ -1,0 +1,471 @@
+"""Token-budget scheduler: chunked prefill + decode packed into one jitted
+mixed step per tick (continuous batching without pool-freezing B=1 prefill).
+
+The legacy Engine (serve.engine) admits a request by running its whole
+prompt as a separate B=1 prefill call: every distinct prompt length is its
+own jit cache entry, and while a prompt compiles/runs every decode slot
+head-of-line blocks. The Scheduler instead splits prompts into
+``rc.prefill_chunk``-token chunks and packs chunks + decode rows into ONE
+fixed-shape step of ``(max_batch, prefill_chunk)`` tokens per tick — one
+compile for the whole serving lifetime, decode rows never stall behind
+admissions, and the per-tick token budget (``rc.token_budget``) bounds tail
+latency under bursts.
+
+Each step carries a :class:`~repro.models.KVView`: per-row write position
+``pos[b]``, per-row live width ``lens[b]`` (decode row = 1, prefill chunk
+≤ chunk width, idle row = 0), and — under ``rc.kv_layout="paged"`` — the
+block tables of serve.cache.BlockManager. Idle/padded columns write to a
+trash location and their outputs are never read; logits are gathered at
+column ``lens[b]-1`` per row.
+
+Cycle attribution (``track_energy=True``): a tick's pool-wide tuGEMM cycles
+are split across scheduled rows by **active-token weighting**
+(``lens[b] / sum(lens)``) — superseding the legacy engine's "split evenly"
+rule, which is only correct when every active row processes the same number
+of tokens. For decode-only ticks the two rules coincide; with prefill
+chunks in the batch the even split would overcharge decode rows by up to
+``chunk×``. Per-row exact attribution still does not exist in the hardware
+(the GEMM M axis is the packed pool and the unit drains max-over-rows);
+token weighting is the documented approximation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, RunConfig
+from ..core.report import slot_energy
+from ..models import KVView, forward, init_caches, lm_logits
+from ..models.transformer import plan_groups
+from ..quant import capture as stats_capture
+from ..quant.capture import tree_totals_by_bits
+from .cache import BlockManager, num_pages_for
+
+__all__ = [
+    "Request",
+    "SlotMeter",
+    "Scheduler",
+    "build_mixed_step",
+    "sample",
+]
+
+
+def sample(key, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class SlotMeter:
+    """Per-request tuGEMM hardware accounting across prefill + decode.
+
+    Cycles are bucketed **per bitwidth**: under a mixed QuantPolicy the
+    int8 attention cycles and int2 MLP cycles of one request run at
+    different clocks and Table-I power points, so they must be kept apart
+    until the final latency/energy conversion."""
+
+    rid: int
+    prompt_tokens: int = 0
+    decode_tokens: int = 0
+    # bits -> cycles; prefill exact ints (legacy B=1 prefill), shared-step
+    # cycles accumulate in float (a step's pool-wide total times this slot's
+    # active-token weight is fractional); rounding happens once at read so
+    # the meters stay conservative: sum over slots == measured pool totals
+    prefill_by_bits: dict = field(default_factory=dict)   # bits -> {variant: int}
+    decode_by_bits: dict = field(default_factory=dict)    # bits -> {variant: float}
+
+    def add_prefill(self, by_bits: dict) -> None:
+        for b, tot in by_bits.items():
+            d = self.prefill_by_bits.setdefault(b, {"serial": 0, "parallel": 0})
+            d["serial"] += tot["serial_cycles"]
+            d["parallel"] += tot["parallel_cycles"]
+
+    def add_share(self, by_bits: dict, weight: float) -> None:
+        """Charge ``weight`` (this slot's active-token fraction) of one
+        step's pool-wide cycles to this request."""
+        for b, tot in by_bits.items():
+            d = self.decode_by_bits.setdefault(b, {"serial": 0.0, "parallel": 0.0})
+            d["serial"] += tot["serial_cycles"] * weight
+            d["parallel"] += tot["parallel_cycles"] * weight
+
+    def add_decode_share(self, by_bits: dict, active: int) -> None:
+        """Legacy even split — every active row decodes exactly one token,
+        so 1/active IS the active-token weight."""
+        self.add_share(by_bits, 1.0 / active)
+
+    def cycles_by_bits(self, variant: str = "serial") -> dict[int, int]:
+        out: dict[int, int] = {}
+        for b, d in self.prefill_by_bits.items():
+            out[b] = out.get(b, 0) + d[variant]
+        for b, d in self.decode_by_bits.items():
+            out[b] = out.get(b, 0) + int(round(d[variant]))
+        return out
+
+    def cycles(self, variant: str = "serial") -> int:
+        return sum(self.cycles_by_bits(variant).values())
+
+    def energy(self, variant: str = "serial", *, bits: int | None = None) -> dict:
+        """Latency/energy of this request's GEMM work on the paper's 16×16
+        unit (time-multiplexed across slots). ``bits`` forces the legacy
+        uniform accounting; the default charges each bucket at its own
+        clock/power."""
+        by = self.cycles_by_bits(variant)
+        lat = e_j = 0.0
+        for b, cyc in by.items():
+            l, e = slot_energy(bits if bits is not None else b, variant, cyc)
+            lat += l
+            e_j += e
+        return {
+            "rid": self.rid,
+            "tokens": self.prompt_tokens + self.decode_tokens,
+            "cycles": sum(by.values()),
+            "cycles_by_bits": by,
+            "latency_s": lat,
+            "energy_j": e_j,
+        }
+
+
+# ------------------------------------------------------------------- step fn
+def build_mixed_step(cfg: ModelConfig, rc: RunConfig, *, with_stats: bool = False):
+    """One tick: (params, caches, tokens (B,W), pos (B,), lens (B,), tables)
+    -> (caches, last_logits (B,V)[, stats]).
+
+    Decode rows use column 0 (lens=1), prefill chunks up to W columns,
+    idle rows lens=0. Row b's logits come from hidden column lens[b]-1 —
+    the next-token distribution after its last real token."""
+
+    def step(params, caches, tokens, pos, lens, tables):
+        view = KVView(
+            pos=pos, lens=lens, tables=tables,
+            block_size=rc.block_size, layout=rc.kv_layout,
+        )
+        batch = {"tokens": tokens}
+        if cfg.mrope_sections is not None:
+            B, S = tokens.shape
+            p = pos[:, None] + jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S)
+            )
+            batch["positions"] = jnp.stack([p, p, p])
+        h, caches, _ = forward(
+            cfg, rc, params, batch, caches=caches, cache_pos=pos, kv_view=view
+        )
+        idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,D)
+        logits = lm_logits(cfg, rc, params, h_last)
+        return caches, logits[:, 0, :]
+
+    if not with_stats:
+        return step
+
+    def step_stats(params, caches, tokens, pos, lens, tables):
+        with stats_capture.capture_stats() as cap:
+            caches, logits = step(params, caches, tokens, pos, lens, tables)
+        return caches, logits, cap.tree
+
+    return step_stats
+
+
+# ----------------------------------------------------------------- scheduler
+@dataclass
+class _Slot:
+    req: Request
+    prompt: list[int]            # effective prompt: original + tokens already
+    #                              generated before a recompute-preemption
+    admit_seq: int = 0           # admission order (preemption picks youngest)
+    pos: int = 0                 # tokens already written to this row's cache
+    last_token: int = 0          # next decode input (last sampled token)
+    meter: SlotMeter | None = None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < len(self.prompt)
+
+
+class Scheduler:
+    """Block-managed, continuously-batched serving engine.
+
+    One jitted mixed step of static shape ``(max_batch, prefill_chunk)``
+    serves prefill and decode alike; the per-tick plan fills rows under a
+    token budget with decode rows first (no starvation), then prompt
+    chunks in FIFO order. ``rc.kv_layout`` selects dense per-row buffers
+    (bit-exact A/B baseline) or the paged pool + BlockManager."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        rc: RunConfig,
+        params: dict,
+        *,
+        capacity: int,
+        max_batch: int,
+        num_pages: int | None = None,
+        temperature: float = 0.0,
+        seed: int = 0,
+        track_energy: bool = False,
+    ):
+        for g in plan_groups(cfg):
+            for kind in g.kinds:
+                if kind.mixer in ("ssm", "hybrid"):
+                    raise NotImplementedError(
+                        "chunked-prefill scheduling needs resumable mixer state; "
+                        "SSM/hybrid stacks serve through the legacy Engine"
+                    )
+        self.cfg, self.rc, self.params = cfg, rc, params
+        self.capacity, self.max_batch = capacity, max_batch
+        self.chunk = max(rc.prefill_chunk, 1)
+        self.token_budget = rc.token_budget or max_batch * self.chunk
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.track_energy = track_energy
+
+        self.paged = rc.kv_layout == "paged"
+        if self.paged:
+            pages = (
+                num_pages
+                if num_pages is not None
+                else num_pages_for(capacity, rc.block_size, max_batch)
+            )
+            self.mgr: BlockManager | None = BlockManager(
+                pages, rc.block_size, max_batch, capacity
+            )
+            self.caches = init_caches(cfg, rc, max_batch, capacity, num_pages=pages)
+        else:
+            self.mgr = None
+            self.caches = init_caches(cfg, rc, max_batch, capacity)
+
+        self._step = jax.jit(
+            build_mixed_step(cfg, rc, with_stats=track_energy), donate_argnums=(1,)
+        )
+        self.slots: list[_Slot | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.finished_meters: list[SlotMeter] = []
+        self.generated_tokens = 0
+        self.ticks = 0
+        self.preemptions = 0
+        self._admit_counter = 0
+        self._meters_by_rid: dict[int, SlotMeter] = {}
+        self._tables_dev = None          # device copy of mgr.tables ...
+        self._tables_version = -1        # ... keyed on mgr.version
+        self._rr = 0                     # rotating plan start (fairness)
+
+    # ---------------------------------------------------------------- admin
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.capacity - 1:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"exceeds capacity {self.capacity} - 1"
+            )
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, sl in enumerate(self.slots):
+            if sl is None and self.queue:
+                req = self.queue.pop(0)
+                meter = None
+                if self.track_energy:
+                    # a preempted request resumes its existing meter: the
+                    # cycles it was already charged must not reset
+                    meter = self._meters_by_rid.get(req.rid)
+                    if meter is None:
+                        meter = SlotMeter(rid=req.rid, prompt_tokens=len(req.prompt))
+                        self._meters_by_rid[req.rid] = meter
+                self.slots[i] = _Slot(
+                    req=req,
+                    prompt=list(req.prompt) + list(req.out),
+                    admit_seq=self._admit_counter,
+                    meter=meter,
+                )
+                self._admit_counter += 1
+
+    def _finish(self, i: int) -> None:
+        sl = self.slots[i]
+        sl.req.done = True
+        self.finished.append(sl.req)
+        if sl.meter is not None:
+            self.finished_meters.append(sl.meter)
+            self._meters_by_rid.pop(sl.req.rid, None)
+        if self.mgr is not None:
+            self.mgr.release(i)
+        self.slots[i] = None
+
+    def _preempt_one(self) -> bool:
+        """Recompute-preemption under pool pressure: release the youngest
+        slot's pages and requeue it at the front; its effective prompt
+        (original + generated so far) is re-prefilled on readmission. Never
+        preempts the last active slot (it must be able to drain)."""
+        cand = [i for i, s in enumerate(self.slots) if s is not None]
+        if len(cand) <= 1:
+            return False
+        i = max(cand, key=lambda j: self.slots[j].admit_seq)
+        sl = self.slots[i]
+        if self.mgr is not None:
+            self.mgr.release(i)
+        self.queue.insert(0, sl.req)
+        self.slots[i] = None
+        self.preemptions += 1
+        return True
+
+    # ----------------------------------------------------------------- tick
+    def _plan(self):
+        """Fill one tick's rows under the token budget: decode rows first
+        (a burst of admissions must never stall decodes), then prompt
+        chunks FIFO. Rows whose page allocation fails stall this tick.
+        Slots are scanned in a per-tick rotated order so a budget tighter
+        than the active row count round-robins instead of starving the
+        high-index rows."""
+        rows, W = self.max_batch, self.chunk
+        tokens = np.zeros((rows, W), np.int32)
+        pos = np.zeros(rows, np.int32)
+        lens = np.zeros(rows, np.int32)
+        budget = self.token_budget
+        decode_rows: list[int] = []
+        prefill_rows: list[int] = []
+        order = [(self._rr + k) % rows for k in range(rows)]
+        for i in order:
+            sl = self.slots[i]
+            if sl is None:
+                continue
+            pos[i] = sl.pos
+            if not sl.prefilling and budget > 0:
+                if self.mgr is not None and not self.mgr.extend(i, sl.pos + 1):
+                    continue  # pool exhausted — row stalls this tick
+                tokens[i, 0] = sl.last_token
+                lens[i] = 1
+                budget -= 1
+                decode_rows.append(i)
+        for i in order:
+            sl = self.slots[i]
+            if sl is None or lens[i] or not sl.prefilling or budget <= 0:
+                continue
+            n = min(W, len(sl.prompt) - sl.pos, budget)
+            if self.mgr is not None and not self.mgr.extend(i, sl.pos + n):
+                continue
+            tokens[i, :n] = sl.prompt[sl.pos : sl.pos + n]
+            lens[i] = n
+            budget -= n
+            prefill_rows.append(i)
+        return tokens, pos, lens, decode_rows, prefill_rows
+
+    def tick(self) -> bool:
+        """Plan + run one mixed step. Returns False when nothing ran."""
+        self._admit()
+        tokens, pos, lens, decode_rows, prefill_rows = self._plan()
+        # pool pressure: nothing schedulable while slots are active means
+        # every row's page allocation failed — recompute-preempt until one
+        # can proceed (bounded by max_batch-1 preemptions)
+        while not (decode_rows or prefill_rows) and self._preempt_one():
+            tokens, pos, lens, decode_rows, prefill_rows = self._plan()
+        scheduled = decode_rows + prefill_rows
+        if not scheduled:
+            if any(s is not None for s in self.slots):
+                raise RuntimeError(
+                    "page pool cannot back a single active sequence "
+                    f"({self.mgr.num_pages if self.mgr else 0} pages of "
+                    f"{self.rc.block_size} tokens)"
+                )
+            return False
+        tables = None
+        if self.mgr is not None:
+            if self._tables_version != self.mgr.version:
+                self._tables_dev = jnp.asarray(self.mgr.tables)
+                self._tables_version = self.mgr.version
+            tables = self._tables_dev
+
+        # width-adaptive tick: decode-only ticks run the step at width 1
+        # (decode rows only occupy column 0) instead of paying the full
+        # chunk width in padded query compute — a second jit cache entry,
+        # still O(1) compiles for the engine's lifetime
+        width = self.chunk if prefill_rows else 1
+        out = self._step(
+            self.params, self.caches,
+            jnp.asarray(tokens[:, :width]), jnp.asarray(pos), jnp.asarray(lens),
+            tables,
+        )
+        if self.track_energy:
+            self.caches, logits, tree = out
+            step_by_bits = tree_totals_by_bits(tree)
+        else:
+            self.caches, logits = out
+        self.ticks += 1
+
+        self.key, k = jax.random.split(self.key)
+        toks = np.asarray(sample(k, logits, self.temperature))
+
+        total = float(sum(int(lens[i]) for i in scheduled))
+        for i in scheduled:
+            sl = self.slots[i]
+            if self.track_energy and sl.meter is not None:
+                sl.meter.add_share(step_by_bits, int(lens[i]) / total)
+            was_decoding = not sl.prefilling
+            sl.pos += int(lens[i])
+            if was_decoding or not sl.prefilling:
+                # decode rows and just-completed prefills both sampled a token
+                t = int(toks[i])
+                # a request's very first token rides its prefill (legacy
+                # semantics: not a decode token); any later one — including
+                # the sample after a preemption's re-prefill — is a decode
+                # token, so meter['tokens'] is preemption-invariant
+                continuing = bool(sl.req.out)
+                sl.req.out.append(t)
+                sl.last_token = t
+                self.generated_tokens += 1
+                if continuing and sl.meter is not None:
+                    sl.meter.decode_tokens += 1
+                if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
+                    self._finish(i)
+        self._rr = (self._rr + 1) % self.max_batch
+        return True
+
+    def run(self, max_ticks: int = 100_000) -> list[Request]:
+        """Drain the queue + all active slots; returns finished requests."""
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
+            if not self.tick() and not self.queue:
+                break
+            ticks += 1
+        return self.finished
+
+    # -------------------------------------------------------------- energy
+    def energy_summary(self, variant: str = "serial") -> list[dict]:
+        """Per-request {rid, tokens, cycles, cycles_by_bits, latency_s,
+        energy_j} — finished requests first, then in-flight slots.
+        Requires ``track_energy=True``."""
+        active = [s.meter for s in self.slots if s is not None and s.meter is not None]
+        return [m.energy(variant) for m in self.finished_meters + active]
+
+    # --------------------------------------------------------------- stats
+    def cache_stats(self) -> dict:
+        """Live-vs-reserved cache accounting for benchmarks."""
+        from .cache import cache_bytes, dense_cache_tokens
+
+        total = cache_bytes(self.caches)
+        if self.mgr is not None:
+            frac = self.mgr.high_water / max(self.mgr.num_pages, 1)
+            return {
+                "layout": "paged",
+                "pool_pages": self.mgr.num_pages,
+                "high_water_pages": self.mgr.high_water,
+                "cache_bytes_reserved": total,
+                "cache_bytes_high_water": int(total * frac),
+            }
+        return {
+            "layout": "dense",
+            "reserved_tokens": dense_cache_tokens(self.max_batch, self.capacity),
+            "cache_bytes_reserved": total,
+            "cache_bytes_high_water": total,
+        }
