@@ -19,6 +19,8 @@ BENCHES = [
     "fig5_maxval_profile",  # Fig 5: max-value profiling -> avg-case speedup
     "accuracy_mlp",         # §III-B.2: exact vs stochastic accuracy
     "kernel_bench",         # kernels: exactness sweep + µs/call
+    "serve_bench",          # paged KV + chunked-prefill vs legacy engine
+    "spec_bench",           # speculative int2-draft decode vs PR 4 baseline
     "edge_planner",         # §IV: deployment planner (beyond paper)
     "roofline_all",         # deliverable (g): aggregate dry-run rooflines
 ]

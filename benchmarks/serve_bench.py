@@ -193,5 +193,10 @@ def main(argv=None):
     return rows
 
 
+def run(fast: bool = False):
+    """benchmarks.run entry point (aggregated into the harness JSON)."""
+    return main(["--fast"] if fast else [])
+
+
 if __name__ == "__main__":
     main()

@@ -6,9 +6,15 @@ deployment mode: exact low-precision GEMM serving).
     PYTHONPATH=src python examples/serve_lm.py --kv-layout paged --block-size 8
     PYTHONPATH=src python examples/serve_lm.py --gemm-backend int8 --kv int8 \
         --kv-layout paged --engine scheduler
+    PYTHONPATH=src python examples/serve_lm.py --gemm-backend int8 \
+        --spec-gamma 2 --draft-policy "*=int2"   # speculative int2 drafting
 
 ``--engine legacy`` runs the old dense-slot engine (one-shot B=1 prefill)
 for comparison — watch the tok/s gap when prompts vary in length.
+``--spec-gamma N`` turns on speculative decoding: each slot drafts N tokens
+per tick against the near-free int2 view of the same weights and the target
+verifies them in one batched mixed step (DESIGN.md §9; default off — off-path
+behavior is identical to the plain scheduler).
 """
 
 from __future__ import annotations
@@ -36,15 +42,23 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--kv", default="bfloat16", choices=["bfloat16", "int8"])
     ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"])
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="speculative decoding: draft N tokens/tick at the "
+                         "draft policy and batch-verify (0 = off)")
+    ap.add_argument("--draft-policy", default="*=int2",
+                    help="QuantPolicy for the draft pass (with --spec-gamma)")
     ap.add_argument("--temperature", type=float, default=0.7)
     args = ap.parse_args(argv)
 
+    spec_on = args.spec_gamma > 0 and args.engine == "scheduler"
     cfg = get_config(args.arch)
     rc = RunConfig(dtype="float32", param_dtype="float32", remat="none",
                    kv_cache_dtype=args.kv,
                    kv_layout=args.kv_layout if args.engine == "scheduler" else "dense",
                    block_size=args.block_size, prefill_chunk=args.prefill_chunk,
-                   quant_policy=f"*={args.gemm_backend}")
+                   quant_policy=f"*={args.gemm_backend}",
+                   spec_gamma=args.spec_gamma if spec_on else 0,
+                   draft_policy=args.draft_policy if spec_on else None)
     params = init(cfg, rc, jax.random.PRNGKey(0))
 
     if args.engine == "scheduler":
@@ -73,6 +87,12 @@ def main(argv=None):
         stats = eng.cache_stats()
         print(f"[serve_lm] cache: {stats['cache_bytes_high_water']}B live high-water "
               f"of {stats['cache_bytes_reserved']}B reserved")
+        if spec_on:
+            s = eng.spec_summary()
+            print(f"[serve_lm] spec: gamma={s['spec_gamma']} "
+                  f"draft={s['draft_policy']} "
+                  f"acceptance={s['acceptance_rate']:.2f} "
+                  f"({s['accepted_draft_tokens']}/{s['drafted_tokens']} drafts)")
     for r in done:
         print(f"  req {r.rid}: {len(r.out)} tokens {r.out[:6]}...")
     assert all(len(r.out) >= args.max_new for r in done)

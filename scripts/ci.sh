@@ -37,6 +37,13 @@ echo "== serve smoke (paged KV + chunked-prefill scheduler)"
 python -m pytest -x -q -p no:randomly tests/test_paged.py
 python benchmarks/serve_bench.py --fast
 
+echo "== spec smoke (speculative int2-draft decode, gamma=2 greedy)"
+# greedy spec-vs-plain conformance + rollback invariants, then the tiny
+# gamma=2 bench (which itself asserts the emitted sequences match the
+# non-speculative baseline bit-for-bit)
+python -m pytest -x -q -p no:randomly tests/test_spec.py
+python benchmarks/spec_bench.py --fast
+
 echo "== tier-1 tests"
 # -p no:randomly: if pytest-randomly is ever installed it would shuffle
 # test order and reseed per test — the conformance suite pins its own seeds

@@ -158,6 +158,14 @@ class RunConfig:
     # mixed step of static width max(prefill_chunk, 1) per tick.
     prefill_chunk: int = 16
     token_budget: int = 0            # per-tick scheduled-token cap (0 -> rows*chunk)
+    # speculative decoding (serve/spec.py): each decode slot drafts
+    # spec_gamma candidate tokens per tick under draft_policy (a second,
+    # low-bit QuantPolicy over the same weights + a draft KV pool); the
+    # target verifies all gamma+1 positions in one chunked-prefill-shaped
+    # mixed step, rolling rejected candidates back via BlockManager.truncate.
+    # 0 = off (the scheduler's plain path, bit-identical to pre-spec builds).
+    spec_gamma: int = 0
+    draft_policy: object = None      # QuantPolicy | grammar str (None -> "*=int2")
     # sharding rule overrides: logical axis -> mesh axis name(s) or None
     sharding_overrides: dict = field(default_factory=dict)
 

@@ -39,6 +39,7 @@ __all__ = [
     "energy_report",
     "ugemm_comparison",
     "slot_energy",
+    "spec_energy_summary",
 ]
 
 
@@ -211,6 +212,42 @@ def energy_report(tree, *, bits: int | None = None, variant: str = "serial") -> 
         rep.baseline = ugemm_comparison(rep.bits, variant)
         rep.unit_power_w = ppa_model(variant).power_w(rep.bits, 16, 16, 16)
     return rep
+
+
+def spec_energy_summary(entries: list[dict]) -> dict:
+    """Speculative-decoding fleet rollup over per-request SlotMeter.energy()
+    dicts (serve.scheduler.Scheduler.energy_summary).
+
+    "Accepted tokens" are the tokens a run actually kept — every one was
+    target-verified (an accepted draft, a rejection correction, a bonus
+    sample, or a prefill sample). The energy totals deliberately include
+    everything spent *around* them: the draft pass at the draft policy's
+    bitwidths (``draft_energy_j``), the verify cycles of rejected candidate
+    positions, and the draft cycles proportional to rejected proposals
+    (``wasted_draft_energy_j``). ``energy_per_accepted_token_j`` is therefore
+    the honest deployment number: joules of tuGEMM work per token kept, waste
+    and all — the metric the int2-draft design is meant to win on."""
+    gen = sum(e.get("generated_tokens", 0) for e in entries)
+    tot = sum(e.get("energy_j", 0.0) for e in entries)
+    lat = sum(e.get("latency_s", 0.0) for e in entries)
+    draft = sum(e.get("draft_energy_j", 0.0) for e in entries)
+    drafted = sum(e.get("drafted_tokens", 0) for e in entries)
+    accepted = sum(e.get("accepted_draft_tokens", 0) for e in entries)
+    rate = accepted / drafted if drafted else 0.0
+    return {
+        "requests": len(entries),
+        "generated_tokens": gen,
+        "drafted_tokens": drafted,
+        "accepted_draft_tokens": accepted,
+        "acceptance_rate": rate,
+        "energy_j": tot,
+        "latency_s": lat,
+        "draft_energy_j": draft,
+        "target_energy_j": tot - draft,
+        "wasted_draft_energy_j": draft * (1.0 - rate),
+        "energy_per_accepted_token_j": (tot / gen) if gen else 0.0,
+        "accepted_tokens_per_j": (gen / tot) if tot > 0 else 0.0,
+    }
 
 
 def slot_energy(bits: int, variant: str, cycles: int) -> tuple[float, float]:

@@ -259,14 +259,22 @@ def matmul_fused(
     bits=8, plane-packed (ceil(K/planes), N) for int4/int2 (pack_weights
     layout — the sub-byte plane decode fuses into the same kernel).
 
-    sx: per-tensor activation scale (scalar); sw: per-column weight scale
-    (N,). Returns y (M, N) ``out_dtype`` (default float32), or
-    (y, TuGemmStats) when ``collect_stats`` — the stats come out of the same
-    pass, not extra operand sweeps. Bit-exact against the unfused
+    sx: activation scale — per-tensor scalar, or a per-token (M,) vector
+    (each row quantized with its own scale; batch-composition-independent
+    outputs, DESIGN.md §9); sw: per-column weight scale (N,). Returns y
+    (M, N) ``out_dtype`` (default float32), or (y, TuGemmStats) when
+    ``collect_stats`` — the stats come out of the same pass, not extra
+    operand sweeps. Bit-exact against the unfused
     quantize/matmul_int8|matmul_packed/dequant composition.
     """
     count_dispatch("matmul_fused")
     path, interp = _resolve(impl)
+    sx = jnp.asarray(sx, jnp.float32)
+    per_token = sx.size > 1
+    if per_token and path == "pallas":
+        # the pallas kernel's scale operand contract is a (1, 1) scalar
+        # block; per-token rows run the (bit-identical) XLA twin instead
+        path = "xla"
     packed = w_quantized and bits < 8
     planes = _PLANES[bits] if packed else 1
     w_mode = "packed" if packed else ("int8" if w_quantized else "quant")
@@ -275,7 +283,7 @@ def matmul_fused(
     Klog = planes * Kw
     assert K <= Klog if packed else K == Kw, (x.shape, w.shape, bits)
     odt = jnp.dtype(out_dtype if out_dtype is not None else x.dtype).name
-    sx2 = jnp.asarray(sx, jnp.float32).reshape(1, 1)
+    sx2 = sx.reshape(-1, 1) if per_token else sx.reshape(1, 1)
     sw2 = jnp.asarray(sw, jnp.float32).reshape(1, N)
     if packed and K < Klog:
         x = jnp.pad(x, ((0, 0), (0, Klog - K)))

@@ -87,9 +87,11 @@ def _dequant_bias(acc, sx, sw, bias, out_dtype):
 
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def dequant_bias_ref(acc, sx, sw, bias, *, out_dtype: str = "float32"):
-    """The unfused pipeline's single 'XLA dequant+bias epilogue' dispatch."""
+    """The unfused pipeline's single 'XLA dequant+bias epilogue' dispatch.
+    ``sx`` is the per-tensor scalar or a per-token (M,) vector."""
+    sx2 = sx.reshape(-1, 1) if sx.size > 1 else sx.reshape(1, 1)
     return _dequant_bias(
-        acc, sx.reshape(1, 1), sw.reshape(1, -1), bias, jnp.dtype(out_dtype)
+        acc, sx2, sw.reshape(1, -1), bias, jnp.dtype(out_dtype)
     )
 
 
@@ -111,15 +113,16 @@ def fused_gemm_ref(
     """Oracle (and jitted XLA production path) for tugemm_fused_pallas.
 
     Same operand contract as the kernel but on *logical* shapes: x (M, K)
-    float, sw (1, N) f32, and for ``w_mode="packed"`` x's K must already be
-    zero-padded to ``planes * w.shape[0]``. Every float op matches the
-    unfused quant/quantize.py → qlinear.py composition bit-for-bit.
+    float, sx (1, 1) f32 per-tensor or (M, 1) per-token, sw (1, N) f32, and
+    for ``w_mode="packed"`` x's K must already be zero-padded to
+    ``planes * w.shape[0]``. Every float op matches the unfused
+    quant/quantize.py → qlinear.py composition bit-for-bit.
 
     Returns y, or (y, colabsmax (K,), rowabsmax (K,)) with stats — here both
     stats vectors are already in logical K order.
     """
     lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
-    xq = jnp.clip(jnp.round(x.astype(jnp.float32) / sx[0, 0]), lo, hi).astype(jnp.int8)
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) / sx), lo, hi).astype(jnp.int8)
     if w_mode == "packed":
         planes = BITS_TO_PLANES[bits]
         wq = jnp.concatenate(

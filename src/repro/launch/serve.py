@@ -48,6 +48,13 @@ def main(argv=None):
     ap.add_argument("--policy", default=None,
                     help="per-layer mixed-precision QuantPolicy, e.g. "
                          "'attn.*=int8,mlp.*=int2,*=bf16' (DESIGN.md §7)")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="speculative decoding: draft N tokens per decode "
+                         "tick against the --draft-policy view and verify "
+                         "them in one mixed step (0 = off; DESIGN.md §9)")
+    ap.add_argument("--draft-policy", default="*=int2",
+                    help="QuantPolicy for the speculative draft pass "
+                         "(ignored unless --spec-gamma > 0)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -65,6 +72,8 @@ def main(argv=None):
         kv_layout=args.kv_layout, block_size=args.block_size,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
         quant_policy=load_policy(args.policy) or f"*={args.gemm_backend}",
+        spec_gamma=args.spec_gamma,
+        draft_policy=load_policy(args.draft_policy) if args.spec_gamma else None,
     )
     mesh = make_local_mesh(args.data, args.model)
     rng = np.random.default_rng(args.seed)
@@ -73,15 +82,23 @@ def main(argv=None):
     if args.engine == "scheduler" and not use_scheduler:
         print(f"[serve] {cfg.family} mixer state is not chunk-resumable — "
               "falling back to the legacy engine")
+    import dataclasses
+
     if not use_scheduler and rc.kv_layout != "dense":
         # the legacy engine only speaks the dense slot layout
-        import dataclasses
-
         print("[serve] legacy engine: forcing --kv-layout dense")
         rc = dataclasses.replace(rc, kv_layout="dense")
+    if not use_scheduler and rc.spec_gamma:
+        print("[serve] legacy engine cannot speculate: disabling --spec-gamma")
+        rc = dataclasses.replace(rc, spec_gamma=0, draft_policy=None)
 
     with use_mesh(mesh):
         params = init(cfg, rc, jax.random.PRNGKey(args.seed))
+        # the draft weight view must derive from the float tree BEFORE the
+        # target policy's surgery packs any leaf (packed leaves pin their own
+        # bitwidth and would silently run the draft at target precision) —
+        # hand the Scheduler the pre-surgery params for its SpecDecoder
+        draft_params = params if (use_scheduler and rc.spec_gamma) else None
         # pack any prequant rules offline (identity for dynamic/bf16
         # policies) — without this the engine would silently fall back to
         # quantize-on-load for weights the policy pinned as plane-packed
@@ -94,6 +111,7 @@ def main(argv=None):
                 capacity=args.capacity, max_batch=args.max_batch,
                 num_pages=args.num_pages or None,
                 temperature=args.temperature, seed=args.seed,
+                draft_params=draft_params,
             )
         else:
             eng = Engine(
@@ -115,6 +133,11 @@ def main(argv=None):
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     if use_scheduler:
         print(f"  cache: {eng.cache_stats()}")
+        if rc.spec_gamma:
+            s = eng.spec_summary()
+            print(f"  spec: gamma={s['spec_gamma']} draft={s['draft_policy']} "
+                  f"acceptance={s['acceptance_rate']:.2f} "
+                  f"({s['accepted_draft_tokens']}/{s['drafted_tokens']} drafts)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

@@ -7,7 +7,13 @@ from .policy import LayerRule, PolicyError, QuantPolicy, ResolvedPolicy, effecti
 from .qlinear import BF16, GemmBackend, QBits, dense, gemm, prequantize_tree
 from .quantize import QuantConfig, compute_scale, dequantize, fake_quant, quantize
 from .stats import StatsCollector, active_collector, collecting
-from .surgery import SurgeryPlan, apply_surgery, forward_with_stats, plan_surgery
+from .surgery import (
+    SurgeryPlan,
+    apply_surgery,
+    draft_quant_view,
+    forward_with_stats,
+    plan_surgery,
+)
 
 __all__ = [
     "BF16",
@@ -36,6 +42,7 @@ __all__ = [
     "tree_totals",
     "SurgeryPlan",
     "apply_surgery",
+    "draft_quant_view",
     "forward_with_stats",
     "plan_surgery",
 ]

@@ -58,8 +58,9 @@ __all__ = [
 KIND_BITS = {"bf16": 16, "int8": 8, "int4": 4, "int2": 2}
 BITS_KIND = {v: k for k, v in KIND_BITS.items()}
 _MODES = ("dynamic", "prequant")
-_FLAGS = ("unfused", "fused", "stats")
+_FLAGS = ("unfused", "fused", "stats", "per_token")
 _IMPLS = ("auto", "xla", "pallas", "pallas_interpret")  # kernels/ops._resolve
+_ACT_SCALES = ("tensor", "token")
 
 
 class PolicyError(ValueError):
@@ -91,11 +92,19 @@ class LayerRule:
     fused: bool = True           # one-pass pipeline (False = legacy unfused)
     impl: str = "auto"           # kernel dispatch (kernels/ops.py)
     collect_stats: bool = False  # emit tuGEMM cycle stats per GEMM
+    # dynamic activation-scale granularity: "tensor" (batch-wide absmax) or
+    # "token" (per-row — outputs independent of co-batched content; grammar
+    # flag ``per_token``, see DESIGN.md §9)
+    act_scale: str = "tensor"
 
     def __post_init__(self):
         object.__setattr__(self, "bits", _coerce_bits(self.bits))
         if self.mode not in _MODES:
             raise PolicyError(f"unknown mode {self.mode!r}; use {_MODES}")
+        if self.act_scale not in _ACT_SCALES:
+            raise PolicyError(
+                f"unknown act_scale {self.act_scale!r}; use {_ACT_SCALES}"
+            )
 
     @property
     def kind(self) -> str:
@@ -118,14 +127,15 @@ class LayerRule:
         if not self.is_quant:
             return BF16
         return GemmBackend(
-            self.kind, self.mode, self.collect_stats, self.impl, self.fused
+            self.kind, self.mode, self.collect_stats, self.impl, self.fused,
+            act_scale=self.act_scale,
         )
 
     def to_json(self) -> dict:
         return {
             "pattern": self.pattern, "bits": self.bits, "mode": self.mode,
             "fused": self.fused, "impl": self.impl,
-            "collect_stats": self.collect_stats,
+            "collect_stats": self.collect_stats, "act_scale": self.act_scale,
         }
 
     @classmethod
@@ -151,6 +161,8 @@ def _parse_spec(pattern: str, spec: str) -> LayerRule:
             kw["fused"] = True
         elif p == "stats":
             kw["collect_stats"] = True
+        elif p == "per_token":
+            kw["act_scale"] = "token"
         elif p in _IMPLS:
             kw["impl"] = p
         else:
@@ -346,6 +358,8 @@ class QuantPolicy:
                     parts.append("unfused")
                 if r.collect_stats:
                     parts.append("stats")
+                if r.act_scale == "token":
+                    parts.append("per_token")
                 if r.impl != "auto":
                     parts.append(r.impl)
             return ":".join(parts)

@@ -10,10 +10,11 @@ Backends (DESIGN.md §3):
 
 - ``bf16``              plain mixed-precision dot (fp32 accumulation)
 - ``int8|int4|int2``    the tuGEMM exact low-precision contract:
-    * ``dynamic``  — quantize activations (per-tensor) and weights
-      (per-out-channel) on the fly, exact integer GEMM, dequantize. Works on
-      unmodified float params (training-time eval, calibration, Fig 5
-      profiling).
+    * ``dynamic``  — quantize activations (per-tensor, or per-row with
+      ``act_scale="token"`` — batch-composition-independent outputs,
+      DESIGN.md §9) and weights (per-out-channel) on the fly, exact integer
+      GEMM, dequantize. Works on unmodified float params (training-time
+      eval, calibration, Fig 5 profiling).
     * ``prequant`` — weights quantized + plane-packed offline
       (``prequantize_tree``); serving path with 2-8× less weight HBM traffic.
 
@@ -71,6 +72,10 @@ class GemmBackend:
     collect_stats: bool = False   # emit tuGEMM cycle stats per GEMM
     impl: str = "auto"            # kernel dispatch (kernels/ops.py)
     fused: bool = True            # one-pass pipeline (False = legacy unfused)
+    # dynamic activation-scale granularity: "tensor" (one absmax over the
+    # whole batch — the paper's default) or "token" (one scale per row, so a
+    # row's output never depends on co-batched content; DESIGN.md §9)
+    act_scale: str = "tensor"
     # deprecated per-layer opt-in: fnmatch patterns over GEMM names. Use
     # quant.policy.QuantPolicy instead (this lowers to a one-rule policy).
     layers: tuple[str, ...] = ()
@@ -196,6 +201,7 @@ def gemm(
         return (y, None) if return_stats else y
 
     bits = backend.bits
+    per_token = backend.act_scale == "token"
     x2, lead = _flatten(x)
     from .calibration import active_observer, active_scales, observe
 
@@ -203,15 +209,16 @@ def gemm(
         observe(name, x2)
     scales = active_scales()
     if scales is not None and name in scales:
-        # static PTQ: fixed calibrated scale (per-GEMM-name)
+        # static PTQ: fixed calibrated scale (per-GEMM-name; calibration is
+        # inherently per-tensor, so it overrides act_scale="token")
         sx = jnp.asarray(scales[name] / (int_range(bits)[1]), jnp.float32)
         sw = compute_scale(w, bits, axis=1)
         ops.count_dispatch("scale_w")
     elif backend.fused:
-        sx, sw = fused_scales(x2, w, bits)          # dynamic scales, 1 dispatch
+        sx, sw = fused_scales(x2, w, bits, per_token)  # dynamic scales, 1 dispatch
         ops.count_dispatch("fused_scales")
     else:
-        sx = compute_scale(x2, bits)                # dynamic per-tensor scale
+        sx = compute_scale(x2, bits, axis=0 if per_token else None)
         sw = compute_scale(w, bits, axis=1)
         ops.count_dispatch("scale_x")
         ops.count_dispatch("scale_w")
@@ -225,7 +232,7 @@ def gemm(
         return (y, stats) if return_stats else y
 
     # ------------------------------------------------ legacy unfused pipeline
-    xq = quantize(x2, sx, bits)
+    xq = quantize(x2, sx.reshape(-1, 1) if per_token else sx, bits)
     wq = quantize(w, sw.reshape(1, -1), bits)
     ops.count_dispatch("quantize_x")
     ops.count_dispatch("quantize_w")
@@ -271,8 +278,9 @@ def _gemm_prequant(
 ):
     backend = _leaf_backend(leaf, backend)
     bits = backend.bits
+    per_token = backend.act_scale == "token"
     x2, lead = _flatten(x)
-    sx = compute_scale(x2, bits)
+    sx = compute_scale(x2, bits, axis=0 if per_token else None)
     ops.count_dispatch("scale_x")
     sw = leaf["qscale"]
     N = sw.shape[0]
@@ -287,7 +295,7 @@ def _gemm_prequant(
         y = y.reshape(*lead, N)
         return (y, stats) if return_stats else y
 
-    xq = quantize(x2, sx, bits)
+    xq = quantize(x2, sx.reshape(-1, 1) if per_token else sx, bits)
     ops.count_dispatch("quantize_x")
     if bits == 8:
         y_int = ops.matmul_int8(xq, leaf["qkernel"], impl=backend.impl)

@@ -67,19 +67,27 @@ def compute_scale(
     return jnp.maximum(amax, 1e-8) * (1.0 / hi)
 
 
-@functools.partial(jax.jit, static_argnames=("bits",))
+@functools.partial(jax.jit, static_argnames=("bits", "per_token"))
 def fused_scales(
-    x: jnp.ndarray, w: jnp.ndarray, bits: int
+    x: jnp.ndarray, w: jnp.ndarray, bits: int, per_token: bool = False
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-tensor activation scale + per-out-channel weight scale, one dispatch.
+    """Activation scale + per-out-channel weight scale, one dispatch.
 
     The only reduction the fused GEMM pipeline (kernels/tugemm_fused.py)
     cannot fold into its own pass: a scale must be known before the first
     block is quantized. Jitting both absmax reductions into one executable
     keeps the dynamic-quant linear layer at two device dispatches total.
     Bit-identical to calling ``compute_scale`` twice.
+
+    ``per_token=True`` scales each activation row (token) independently —
+    shape (M,) instead of a scalar. Besides the usual accuracy win, this
+    makes a quantized GEMM's per-row outputs independent of what else is in
+    the batch: serving results stop depending on co-batched traffic, which
+    is what lets speculative verify steps reproduce decode steps bit-for-bit
+    (DESIGN.md §9).
     """
-    return compute_scale(x, bits), compute_scale(w, bits, axis=1)
+    sx = compute_scale(x, bits, axis=0 if per_token else None)
+    return sx, compute_scale(w, bits, axis=1)
 
 
 def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:

@@ -59,6 +59,7 @@ __all__ = [
     "SurgeryPlan",
     "plan_surgery",
     "apply_surgery",
+    "draft_quant_view",
     "forward_with_stats",
     "gemm_name_targets",
     "validate_runtime_policy",
@@ -327,6 +328,50 @@ def apply_surgery(cfg: ModelConfig, rc: RunConfig, params: dict) -> dict:
         policy.validate(entries_seen)
     _check_stack_consistency(policy, entries_seen)
     return out
+
+
+def draft_quant_view(
+    cfg: ModelConfig, rc: RunConfig, params: dict
+) -> tuple[RunConfig, dict]:
+    """The speculative *draft* side of a RunConfig: ``(rc_draft, weight view)``.
+
+    ``rc.draft_policy`` (QuantPolicy | grammar string | to_json dict; default
+    ``"*=int2"`` — the paper's cheapest Table-I operating point) becomes a
+    standalone RunConfig — same dtypes/KV layout/chunking as the target so the
+    draft's mixed step shares block tables with the target pool, but with the
+    draft policy as its only quantization knob (legacy single-backend fields
+    cleared: they would trip effective_policy's both-set ambiguity guard).
+
+    The weight view is the *same float tree* for dynamic draft policies (the
+    fused kernel quantizes on load at the draft width — a second
+    policy-quantized view of the same weights, materialized lazily per GEMM),
+    and an offline-packed second tree for prequant draft rules. A base tree
+    that target-policy surgery already packed cannot be re-viewed — packed
+    leaves pin their own bitwidth (qlinear ``qbits``), so the draft would
+    silently run at target precision; callers must build the draft view from
+    the original float params first (launch/serve.py does)."""
+    draft = getattr(rc, "draft_policy", None)
+    if draft is None:
+        draft = "*=int2"
+    rc_draft = dataclasses.replace(
+        rc,
+        quant_policy=draft,
+        gemm_backend="bf16", gemm_mode="dynamic",
+        collect_gemm_stats=False, quant_layers=(),
+        spec_gamma=0, draft_policy=None,
+    )
+    policy = effective_policy(rc_draft)
+    packed: set = set()
+    gemm_name_targets(cfg, params, packed=packed)
+    if packed:
+        raise PolicyError(
+            "draft_quant_view needs the original float params: leaves "
+            f"{sorted(packed)[:3]}... are already prequant-packed and would "
+            "pin the target bitwidth under the draft policy — build the "
+            "draft view before running target-policy apply_surgery"
+        )
+    view = apply_surgery(cfg, rc_draft, params) if policy.any_prequant else params
+    return rc_draft, view
 
 
 def forward_with_stats(

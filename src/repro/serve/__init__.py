@@ -1,14 +1,26 @@
 """Serving substrate.
 
-- serve.cache: paged KV pool block manager (free-list pages, block tables)
+- serve.cache: paged KV pool block manager (free-list pages, block tables,
+  speculative fork/rollback via truncate)
 - serve.scheduler: chunked-prefill + decode mixed-step Scheduler (the
-  block-managed, continuously-batched engine)
+  block-managed, continuously-batched engine; speculative ticks when
+  rc.spec_gamma > 0)
+- serve.spec: int-low self-drafting + batched-verify speculative decoding
+  (draft QuantPolicy weight view, draft KV pool, acceptance rules)
 - serve.engine: legacy dense-slot Engine (bit-exact A/B baseline; SSM/hybrid)
 """
 
 from .cache import BlockManager, num_pages_for
 from .engine import Engine, build_decode, build_prefill
-from .scheduler import Request, Scheduler, SlotMeter, build_mixed_step, sample
+from .scheduler import (
+    Request,
+    Scheduler,
+    SlotMeter,
+    build_mixed_step,
+    request_keys,
+    sample,
+)
+from .spec import SpecDecoder, greedy_accept, rejection_accept
 
 __all__ = [
     "BlockManager",
@@ -17,8 +29,12 @@ __all__ = [
     "Request",
     "Scheduler",
     "SlotMeter",
+    "SpecDecoder",
     "build_decode",
     "build_mixed_step",
     "build_prefill",
+    "greedy_accept",
+    "rejection_accept",
+    "request_keys",
     "sample",
 ]

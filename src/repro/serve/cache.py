@@ -96,6 +96,31 @@ class BlockManager:
         self.high_water = max(self.high_water, self.pages_in_use)
         return True
 
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Roll ``slot`` back to ``new_len`` live tokens, freeing every page
+        past the new high block — the speculative-decoding rollback primitive
+        (serve/spec.py): a verify step writes all γ+1 candidate positions
+        optimistically, then truncates to the accepted prefix so rejected
+        drafts never leak KV pages. Stale tokens inside the retained final
+        page are harmless — every device read is masked at the live length.
+        O(pages freed); never fails (shrink-only)."""
+        if new_len > int(self.lens[slot]):
+            raise ValueError(
+                f"slot {slot}: truncate to {new_len} > live length "
+                f"{int(self.lens[slot])} (rollback cannot grow; use extend)"
+            )
+        have = int(self.blocks_used[slot])
+        need = -(-new_len // self.block_size)
+        if need < have:
+            self.version += 1
+            # reverse order keeps the LIFO free list warm: the next extend
+            # gets this slot's just-released tail pages back first
+            for b in range(have - 1, need - 1, -1):
+                self.free.append(int(self.tables[slot, b]))
+                self.tables[slot, b] = self.trash
+            self.blocks_used[slot] = need
+        self.lens[slot] = new_len
+
     def release(self, slot: int) -> None:
         """Return every page of ``slot`` to the free list."""
         used = int(self.blocks_used[slot])

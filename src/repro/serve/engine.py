@@ -106,6 +106,12 @@ class Engine:
                 "the legacy Engine only speaks the dense slot layout; "
                 "use serve.Scheduler for rc.kv_layout='paged'"
             )
+        if getattr(rc, "spec_gamma", 0):
+            raise ValueError(
+                "speculative decoding (rc.spec_gamma) needs the mixed-step "
+                "Scheduler's draft/verify tick planning; the legacy Engine "
+                "would silently ignore it"
+            )
         self.cfg, self.rc, self.params = cfg, rc, params
         self.capacity, self.max_batch = capacity, max_batch
         self.temperature = temperature
@@ -176,6 +182,8 @@ class Engine:
                 self.key, k = jax.random.split(self.key)
                 tok = sample(k, logits, self.temperature)
                 req.out.append(int(tok[0]))
+                if self.track_energy and self.meters[i] is not None:
+                    self.meters[i].emitted_tokens += 1
                 self.caches = self._insert(self.caches, fresh, i)
                 self.slots[i] = req
                 self.last_tokens = self.last_tokens.at[i, 0].set(tok[0])
@@ -221,6 +229,7 @@ class Engine:
             if self.track_energy and self.meters[i] is not None:
                 m = self.meters[i]
                 m.decode_tokens += 1
+                m.emitted_tokens += 1
                 m.add_decode_share(step_by_bits, len(active))
             if len(req.out) >= req.max_new or self.pos >= self.capacity - 1:
                 req.done = True

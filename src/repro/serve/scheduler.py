@@ -50,13 +50,49 @@ __all__ = [
     "SlotMeter",
     "Scheduler",
     "build_mixed_step",
+    "request_keys",
     "sample",
 ]
 
 
+# PRNG stream tags folded into per-request keys: the token sampled at one
+# sequence position must draw from a different stream than the speculative
+# machinery's draws *about* that position (serve/spec.py), or acceptance
+# thresholds would be correlated with the tokens they judge.
+STREAM_SAMPLE = 0    # the canonical next-token draw at a position
+STREAM_DRAFT = 1     # draft-model proposal draw
+STREAM_ACCEPT = 2    # rejection-sampling acceptance uniform
+STREAM_RESIDUAL = 3  # residual-distribution draw after a rejection
+
+
+def request_keys(
+    base_key, rids, positions, stream: int = STREAM_SAMPLE
+) -> jnp.ndarray:
+    """Deterministic per-row PRNG keys: ``fold_in(base, rid, position,
+    stream)`` for each row. ``positions`` are absolute sequence indices of
+    the token being drawn, so a request's random stream depends only on
+    (seed, rid, position) — never on how the scheduler happened to pack
+    ticks. Temperature>0 runs are reproducible across batch sizes, arrival
+    orders, and recompute preemptions (the re-sampled token at a replayed
+    position reuses its original key)."""
+    rids = jnp.asarray(rids, jnp.int32)
+    positions = jnp.asarray(positions, jnp.int32)
+    keys = jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids)
+    keys = jax.vmap(jax.random.fold_in)(keys, positions)
+    return jax.vmap(lambda k: jax.random.fold_in(k, stream))(keys)
+
+
 def sample(key, logits: jnp.ndarray, temperature: float = 0.0) -> jnp.ndarray:
+    """Greedy argmax at temperature<=0 (key unused). Otherwise a categorical
+    draw: with a single key, one batched draw (legacy engine); with a stack
+    of per-row keys (``request_keys``, key.ndim == logits.ndim) each row
+    draws from its own stream."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if getattr(key, "ndim", 1) == 2:  # stacked per-row keys (B, key_data)
+        return jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / temperature, axis=-1)
+        )(key, logits).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
 
 
@@ -81,12 +117,26 @@ class SlotMeter:
     rid: int
     prompt_tokens: int = 0
     decode_tokens: int = 0
+    # tokens actually emitted so far (decode tokens + the prefill-riding
+    # first token once it exists) — exact even mid-prefill, unlike deriving
+    # it from prompt_tokens
+    emitted_tokens: int = 0
+    # speculative decoding (serve/spec.py): proposals this request drafted,
+    # and how many of them the target verified and kept. Rejected drafts'
+    # compute is NOT subtracted anywhere — their cycles stay in the buckets
+    # below, so energy-per-accepted-token honestly includes the waste.
+    drafted_tokens: int = 0
+    accepted_draft_tokens: int = 0
     # bits -> cycles; prefill exact ints (legacy B=1 prefill), shared-step
     # cycles accumulate in float (a step's pool-wide total times this slot's
     # active-token weight is fractional); rounding happens once at read so
-    # the meters stay conservative: sum over slots == measured pool totals
+    # the meters stay conservative: sum over slots == measured pool totals.
+    # Draft-pass cycles are kept apart from target cycles: under spec
+    # decoding the draft runs a *different* QuantPolicy (e.g. int2), and the
+    # accepted-tokens/J report needs the draft-vs-verify energy split.
     prefill_by_bits: dict = field(default_factory=dict)   # bits -> {variant: int}
     decode_by_bits: dict = field(default_factory=dict)    # bits -> {variant: float}
+    draft_by_bits: dict = field(default_factory=dict)     # bits -> {variant: float}
 
     def add_prefill(self, by_bits: dict) -> None:
         for b, tot in by_bits.items():
@@ -94,11 +144,15 @@ class SlotMeter:
             d["serial"] += tot["serial_cycles"]
             d["parallel"] += tot["parallel_cycles"]
 
-    def add_share(self, by_bits: dict, weight: float) -> None:
+    def add_share(self, by_bits: dict, weight: float, *, bucket: str = "decode") -> None:
         """Charge ``weight`` (this slot's active-token fraction) of one
-        step's pool-wide cycles to this request."""
+        step's pool-wide cycles to this request. ``bucket="draft"`` routes
+        to the draft-pass accounting (cycles at the draft policy's
+        bitwidths); the default is the target-policy bucket (decode +
+        spec-verify steps)."""
+        dst = self.draft_by_bits if bucket == "draft" else self.decode_by_bits
         for b, tot in by_bits.items():
-            d = self.decode_by_bits.setdefault(b, {"serial": 0.0, "parallel": 0.0})
+            d = dst.setdefault(b, {"serial": 0.0, "parallel": 0.0})
             d["serial"] += tot["serial_cycles"] * weight
             d["parallel"] += tot["parallel_cycles"] * weight
 
@@ -107,12 +161,21 @@ class SlotMeter:
         so 1/active IS the active-token weight."""
         self.add_share(by_bits, 1.0 / active)
 
-    def cycles_by_bits(self, variant: str = "serial") -> dict[int, int]:
+    def cycles_by_bits(
+        self, variant: str = "serial", *, bucket: str | None = None
+    ) -> dict[int, int]:
+        """Total cycles per bitwidth. ``bucket`` selects one accounting
+        bucket ("prefill" | "decode" | "draft"); None sums all three."""
+        srcs = {
+            "prefill": self.prefill_by_bits,
+            "decode": self.decode_by_bits,
+            "draft": self.draft_by_bits,
+        }
+        picked = srcs.values() if bucket is None else (srcs[bucket],)
         out: dict[int, int] = {}
-        for b, d in self.prefill_by_bits.items():
-            out[b] = out.get(b, 0) + d[variant]
-        for b, d in self.decode_by_bits.items():
-            out[b] = out.get(b, 0) + int(round(d[variant]))
+        for src in picked:
+            for b, d in src.items():
+                out[b] = out.get(b, 0) + int(round(d[variant]))
         return out
 
     def cycles(self, variant: str = "serial") -> int:
@@ -122,31 +185,59 @@ class SlotMeter:
         """Latency/energy of this request's GEMM work on the paper's 16×16
         unit (time-multiplexed across slots). ``bits`` forces the legacy
         uniform accounting; the default charges each bucket at its own
-        clock/power."""
+        clock/power. Under speculative decoding ``energy_j`` includes the
+        draft pass and every rejected candidate's verify cycles — the
+        ``draft_*`` fields expose the split."""
         by = self.cycles_by_bits(variant)
         lat = e_j = 0.0
         for b, cyc in by.items():
             l, e = slot_energy(bits if bits is not None else b, variant, cyc)
             lat += l
             e_j += e
-        return {
+        draft_by = self.cycles_by_bits(variant, bucket="draft")
+        draft_e = 0.0
+        for b, cyc in draft_by.items():
+            draft_e += slot_energy(bits if bits is not None else b, variant, cyc)[1]
+        out = {
             "rid": self.rid,
             "tokens": self.prompt_tokens + self.decode_tokens,
+            "generated_tokens": self.emitted_tokens,
             "cycles": sum(by.values()),
             "cycles_by_bits": by,
             "latency_s": lat,
             "energy_j": e_j,
         }
+        if self.drafted_tokens or draft_by:
+            out.update(
+                drafted_tokens=self.drafted_tokens,
+                accepted_draft_tokens=self.accepted_draft_tokens,
+                draft_cycles_by_bits=draft_by,
+                draft_energy_j=draft_e,
+                target_energy_j=e_j - draft_e,
+            )
+        return out
 
 
 # ------------------------------------------------------------------- step fn
-def build_mixed_step(cfg: ModelConfig, rc: RunConfig, *, with_stats: bool = False):
+def build_mixed_step(
+    cfg: ModelConfig,
+    rc: RunConfig,
+    *,
+    with_stats: bool = False,
+    all_logits: bool = False,
+):
     """One tick: (params, caches, tokens (B,W), pos (B,), lens (B,), tables)
-    -> (caches, last_logits (B,V)[, stats]).
+    -> (caches, logits[, stats]).
 
     Decode rows use column 0 (lens=1), prefill chunks up to W columns,
-    idle rows lens=0. Row b's logits come from hidden column lens[b]-1 —
-    the next-token distribution after its last real token."""
+    idle rows lens=0. By default row b's logits come from hidden column
+    lens[b]-1 — the next-token distribution after its last real token —
+    and the step returns (B, V). ``all_logits=True`` keeps *every* chunk
+    column's next-token distribution, returning (B, W, V): the speculative
+    verify step (serve/spec.py) judges all γ+1 candidate positions of a
+    row from one chunked-prefill-shaped pass, so no position may be
+    discarded. Padded columns (>= lens[b]) carry garbage — callers mask by
+    lens exactly as the KV write path does."""
 
     def step(params, caches, tokens, pos, lens, tables):
         view = KVView(
@@ -163,6 +254,8 @@ def build_mixed_step(cfg: ModelConfig, rc: RunConfig, *, with_stats: bool = Fals
         h, caches, _ = forward(
             cfg, rc, params, batch, caches=caches, cache_pos=pos, kv_view=view
         )
+        if all_logits:
+            return caches, lm_logits(cfg, rc, params, h)       # (B, W, V)
         idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
         h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,D)
         logits = lm_logits(cfg, rc, params, h_last)
@@ -189,6 +282,17 @@ class _Slot:
     pos: int = 0                 # tokens already written to this row's cache
     last_token: int = 0          # next decode input (last sampled token)
     meter: SlotMeter | None = None
+    # speculative decoding (serve/spec.py): tokens already written to this
+    # row of the *draft* KV pool, plus the committed sequence tokens the
+    # draft has not ingested yet (draft_pos + len(draft_gap) == pos at tick
+    # boundaries). The gap is normally 0 or 1 token — exactly the previous
+    # tick's last accepted candidate when all γ were accepted — and is
+    # bounded by γ: a slot that falls further behind (repeated pool-pressure
+    # ticks with no draft budget) goes draft_stale and plain-decodes from
+    # then on rather than growing unbounded catch-up state.
+    draft_pos: int = 0
+    draft_gap: list[int] = field(default_factory=list)
+    draft_stale: bool = False
 
     @property
     def prefilling(self) -> bool:
@@ -216,6 +320,7 @@ class Scheduler:
         temperature: float = 0.0,
         seed: int = 0,
         track_energy: bool = False,
+        draft_params: dict | None = None,
     ):
         for g in plan_groups(cfg):
             for kind in g.kinds:
@@ -250,11 +355,32 @@ class Scheduler:
         self._step = jax.jit(
             build_mixed_step(cfg, rc, with_stats=track_energy), donate_argnums=(1,)
         )
+        # speculative decoding: a draft-policy model view + draft KV pool
+        # (serve.spec.SpecDecoder) and a verify-shaped target step that keeps
+        # every chunk column's logits. All spec-mode ticks route through
+        # _spec_tick; spec_gamma == 0 leaves the plain path byte-for-byte.
+        self.spec = None
+        if getattr(rc, "spec_gamma", 0) > 0:
+            from .spec import SpecDecoder
+
+            self.spec = SpecDecoder(
+                cfg, rc, params,
+                max_batch=max_batch, capacity=capacity,
+                num_pages=self.mgr.num_pages if self.mgr is not None else None,
+                track_energy=track_energy, draft_params=draft_params,
+            )
+            self._vstep = jax.jit(
+                build_mixed_step(cfg, rc, with_stats=track_energy, all_logits=True),
+                donate_argnums=(1,),
+            )
         self.slots: list[_Slot | None] = [None] * max_batch
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.finished_meters: list[SlotMeter] = []
+        self.final_kv_lens: dict[int, int] = {}   # rid -> live KV at finish
         self.generated_tokens = 0
+        self.drafted_tokens = 0
+        self.accepted_draft_tokens = 0
         self.ticks = 0
         self.preemptions = 0
         self._admit_counter = 0
@@ -296,6 +422,7 @@ class Scheduler:
         sl = self.slots[i]
         sl.req.done = True
         self.finished.append(sl.req)
+        self.final_kv_lens[sl.req.rid] = sl.pos
         if sl.meter is not None:
             self.finished_meters.append(sl.meter)
             self._meters_by_rid.pop(sl.req.rid, None)
@@ -361,6 +488,45 @@ class Scheduler:
             prefill_rows.append(i)
         return tokens, pos, lens, decode_rows, prefill_rows
 
+    def _tables(self):
+        """Device copy of the block tables, re-uploaded only when the host
+        manager mutated since the last tick (version-keyed)."""
+        if self.mgr is None:
+            return None
+        if self._tables_version != self.mgr.version:
+            self._tables_dev = jnp.asarray(self.mgr.tables)
+            self._tables_version = self.mgr.version
+        return self._tables_dev
+
+    def _sample_keys(self, pos, lens):
+        """Per-row fold_in(seed, rid, position) keys for this tick's draws —
+        position is the absolute sequence index each row samples, so the
+        stream never depends on how ticks were packed. Greedy ticks skip the
+        fold entirely (sample() ignores the key at temperature 0)."""
+        if self.temperature <= 0.0:
+            return self.key
+        rids = [sl.req.rid if (sl := self.slots[i]) is not None else 0
+                for i in range(self.max_batch)]
+        posn = [int(pos[i]) + int(lens[i]) for i in range(self.max_batch)]
+        return request_keys(self.key, rids, posn)
+
+    def _emit(self, i: int, token: int) -> None:
+        """Append one sampled/accepted token to slot ``i``'s request.
+
+        A request's very first token rides its prefill (legacy semantics:
+        not a decode token); any later one — including the sample after a
+        preemption's re-prefill — is a decode token, so meter['tokens'] is
+        preemption-invariant."""
+        sl = self.slots[i]
+        continuing = bool(sl.req.out)
+        sl.req.out.append(token)
+        sl.last_token = token
+        self.generated_tokens += 1
+        if sl.meter is not None:
+            sl.meter.emitted_tokens += 1
+            if continuing:
+                sl.meter.decode_tokens += 1
+
     def tick(self) -> bool:
         """Plan + run one mixed step. Returns False when nothing ran."""
         self._admit()
@@ -379,12 +545,9 @@ class Scheduler:
                     f"{self.rc.block_size} tokens)"
                 )
             return False
-        tables = None
-        if self.mgr is not None:
-            if self._tables_version != self.mgr.version:
-                self._tables_dev = jnp.asarray(self.mgr.tables)
-                self._tables_version = self.mgr.version
-            tables = self._tables_dev
+        if self.spec is not None:
+            return self._spec_tick(tokens, pos, lens, decode_rows, prefill_rows)
+        tables = self._tables()
 
         # width-adaptive tick: decode-only ticks run the step at width 1
         # (decode rows only occupy column 0) instead of paying the full
@@ -403,8 +566,7 @@ class Scheduler:
             self.caches, logits = out
         self.ticks += 1
 
-        self.key, k = jax.random.split(self.key)
-        toks = np.asarray(sample(k, logits, self.temperature))
+        toks = np.asarray(sample(self._sample_keys(pos, lens), logits, self.temperature))
 
         total = float(sum(int(lens[i]) for i in scheduled))
         for i in scheduled:
@@ -415,19 +577,180 @@ class Scheduler:
             sl.pos += int(lens[i])
             if was_decoding or not sl.prefilling:
                 # decode rows and just-completed prefills both sampled a token
-                t = int(toks[i])
-                # a request's very first token rides its prefill (legacy
-                # semantics: not a decode token); any later one — including
-                # the sample after a preemption's re-prefill — is a decode
-                # token, so meter['tokens'] is preemption-invariant
-                continuing = bool(sl.req.out)
-                sl.req.out.append(t)
-                sl.last_token = t
-                self.generated_tokens += 1
-                if continuing and sl.meter is not None:
-                    sl.meter.decode_tokens += 1
+                self._emit(i, int(toks[i]))
                 if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                     self._finish(i)
+        self._rr = (self._rr + 1) % self.max_batch
+        return True
+
+    # ------------------------------------------------------------ spec tick
+    def _spec_tick(self, tokens, pos, lens, decode_rows, prefill_rows) -> bool:
+        """One speculative tick (DESIGN.md §9).
+
+        Decode rows draft up to γ candidates against the int-low draft view
+        + draft KV pool (serve.spec), then ONE chunked-prefill-shaped target
+        step verifies all γ+1 positions per decode row while also running
+        the tick's ordinary prefill chunks; rejected candidates are rolled
+        back via BlockManager.truncate so they never leak KV. Prefill chunks
+        are mirrored into the draft pool (at the draft policy's near-free
+        bitwidth) so a slot can start drafting the moment it finishes
+        prefilling."""
+        from .spec import DraftRow, greedy_accept, rejection_accept
+
+        spec, rows = self.spec, self.max_batch
+        # per-row candidate budget: never draft past max_new or capacity,
+        # and degrade γ (not stall) when the page pool cannot back the
+        # optimistic γ+1 verify writes
+        g: dict[int, int] = {}
+        draft_rows: list[DraftRow] = []
+        for i in decode_rows:
+            sl = self.slots[i]
+            remaining = sl.req.max_new - len(sl.req.out)
+            gi = max(0, min(spec.gamma, remaining - 1, self.capacity - 2 - sl.pos))
+            if sl.draft_stale:
+                gi = 0
+            while gi > 0 and self.mgr is not None and not self.mgr.extend(i, sl.pos + gi + 1):
+                gi -= 1
+            g[i] = gi
+            if gi > 0:
+                draft_rows.append(DraftRow(
+                    row=i, rid=sl.req.rid, pos=sl.pos, draft_pos=sl.draft_pos,
+                    gap=list(sl.draft_gap), last_token=sl.last_token, g=gi,
+                ))
+        tables = self._tables()
+
+        # ---- draft phase: γ sequential low-bit steps over the draft rows
+        proposals: dict[int, list[int]] = {}
+        qlogits: list[np.ndarray] = []
+        if draft_rows:
+            proposals, qlogits, draft_events = spec.draft(
+                draft_rows, tables, self.temperature, self.key
+            )
+            for by_bits, weights in draft_events:
+                for i, w in weights.items():
+                    sl = self.slots[i]
+                    if sl is not None and sl.meter is not None:
+                        sl.meter.add_share(by_bits, w, bucket="draft")
+            for r in draft_rows:
+                sl = self.slots[r.row]
+                # the draft ingested [gap..., last, d_1..d_{g-1}] — its pool
+                # now covers sequence positions < pos + g
+                sl.draft_pos = r.pos + r.g
+                sl.draft_gap = []
+                self.drafted_tokens += r.g
+                if sl.meter is not None:
+                    sl.meter.drafted_tokens += r.g
+
+        # ---- verify + prefill: one target step, every column's logits kept
+        W = tokens.shape[1]
+        Wv = max(spec.gamma + 1, W if prefill_rows else 0)
+        vt = np.zeros((rows, Wv), np.int32)
+        vlens = np.zeros(rows, np.int32)
+        for i in prefill_rows:
+            vt[i, : int(lens[i])] = tokens[i, : int(lens[i])]
+            vlens[i] = lens[i]
+        for i in decode_rows:
+            sl = self.slots[i]
+            vt[i, 0] = sl.last_token
+            for j, t in enumerate(proposals.get(i, [])):
+                vt[i, 1 + j] = t
+            vlens[i] = g[i] + 1
+        out = self._vstep(
+            self.params, self.caches,
+            jnp.asarray(vt), jnp.asarray(pos), jnp.asarray(vlens), tables,
+        )
+        if self.track_energy:
+            self.caches, logits, tree = out
+            step_by_bits = tree_totals_by_bits(tree)
+        else:
+            self.caches, logits = out
+        self.ticks += 1
+        scheduled = decode_rows + prefill_rows
+        total = float(sum(int(vlens[i]) for i in scheduled))
+        if self.track_energy:
+            for i in scheduled:
+                sl = self.slots[i]
+                if sl.meter is not None:
+                    sl.meter.add_share(step_by_bits, int(vlens[i]) / total)
+
+        # ---- mirror prefill chunks into the draft KV pool
+        if prefill_rows:
+            mlens = lens.copy()
+            for i in decode_rows:
+                mlens[i] = 0
+            m_by_bits = spec.mirror_prefill(
+                jnp.asarray(tokens[:, :W]), jnp.asarray(pos), jnp.asarray(mlens),
+                tables,
+            )
+            m_total = float(sum(int(mlens[i]) for i in prefill_rows))
+            for i in prefill_rows:
+                sl = self.slots[i]
+                if m_by_bits and sl.meter is not None:
+                    sl.meter.add_share(m_by_bits, int(mlens[i]) / m_total,
+                                       bucket="draft")
+                sl.draft_pos = int(pos[i]) + int(lens[i])
+
+        # ---- acceptance + emission
+        logits_np = np.asarray(logits, np.float32)           # (B, Wv, V)
+        if self.temperature <= 0.0:
+            argmax = np.argmax(logits_np, axis=-1)           # (B, Wv)
+        for i in decode_rows:
+            sl = self.slots[i]
+            if self.temperature <= 0.0:
+                n_acc, emitted = greedy_accept(proposals.get(i, []), argmax[i])
+            else:
+                q_rows = np.stack([qlogits[j][i] for j in range(g[i])]) \
+                    if g[i] else np.zeros((0, logits_np.shape[-1]), np.float32)
+                n_acc, emitted = rejection_accept(
+                    self.key, sl.req.rid, sl.pos, proposals.get(i, []),
+                    logits_np[i, : g[i] + 1], q_rows, self.temperature,
+                )
+            self.accepted_draft_tokens += n_acc
+            if sl.meter is not None:
+                sl.meter.accepted_draft_tokens += n_acc
+            # rollback: keep only the accepted prefix's KV in both pools
+            new_len = sl.pos + n_acc + 1
+            if self.mgr is not None:
+                self.mgr.truncate(i, new_len)
+            sl.pos = new_len
+            if g[i] == 0:
+                # plain-decode fallback tick: the draft never saw the old
+                # last token — queue it for the next catch-up step
+                if not sl.draft_stale:
+                    sl.draft_gap.append(sl.last_token)
+                    if len(sl.draft_gap) > spec.gamma:
+                        sl.draft_stale = True
+                        sl.draft_gap = []
+            elif sl.draft_pos >= new_len:
+                # a candidate was rejected: the draft KV past the accepted
+                # prefix is dead too (position new_len-1, whose input is the
+                # last accepted token, stays valid)
+                sl.draft_pos = new_len
+            else:
+                # all γ accepted: the draft never ingested d_γ — carry it as
+                # catch-up for the next tick's first draft step
+                sl.draft_gap = [int(emitted[-2])]
+            for t in emitted:
+                self._emit(i, int(t))
+            if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
+                self._finish(i)
+        # prefill rows: plain chunk bookkeeping + completion sampling from
+        # the verify step's per-position logits (column lens-1)
+        if prefill_rows:
+            keys = self._sample_keys(pos, lens)
+            for i in prefill_rows:
+                sl = self.slots[i]
+                sl.pos += int(lens[i])
+                if not sl.prefilling:
+                    row_logits = logits_np[i, int(lens[i]) - 1]
+                    if self.temperature <= 0.0:
+                        t = int(np.argmax(row_logits))
+                    else:
+                        t = int(sample(keys[i], jnp.asarray(row_logits),
+                                       self.temperature))
+                    self._emit(i, t)
+                    if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
+                        self._finish(i)
         self._rr = (self._rr + 1) % self.max_batch
         return True
 
@@ -448,12 +771,35 @@ class Scheduler:
         active = [s.meter for s in self.slots if s is not None and s.meter is not None]
         return [m.energy(variant) for m in self.finished_meters + active]
 
+    def spec_summary(self, variant: str = "serial") -> dict:
+        """Speculative-decoding rollup: acceptance rate + the draft-vs-verify
+        energy split and energy-per-accepted-token (core.report). Requires
+        ``track_energy=True`` for the energy fields; the token counters are
+        always live."""
+        from ..core.report import spec_energy_summary
+
+        out = spec_energy_summary(self.energy_summary(variant))
+        out.update(
+            spec_gamma=self.spec.gamma if self.spec is not None else 0,
+            draft_policy=self.spec.describe_draft() if self.spec is not None else None,
+            ticks=self.ticks,
+            drafted_tokens=self.drafted_tokens,
+            accepted_draft_tokens=self.accepted_draft_tokens,
+            acceptance_rate=(self.accepted_draft_tokens / self.drafted_tokens
+                             if self.drafted_tokens else 0.0),
+        )
+        return out
+
     # --------------------------------------------------------------- stats
     def cache_stats(self) -> dict:
         """Live-vs-reserved cache accounting for benchmarks."""
         from .cache import cache_bytes, dense_cache_tokens
 
         total = cache_bytes(self.caches)
+        if self.spec is not None:
+            # the draft pool is real memory: report it alongside (same page
+            # high-water — one BlockManager backs both pools)
+            total += cache_bytes(self.spec.caches)
         if self.mgr is not None:
             frac = self.mgr.high_water / max(self.mgr.num_pages, 1)
             return {

@@ -1,0 +1,297 @@
+"""Speculative decoding: int-low self-drafting + batched verify (DESIGN.md §9).
+
+Table I's PPA slope is the whole point of tuGEMM — a 2-bit GEMM unit costs
+~0.01 mm²/4 mW against the 8-bit point — so a *draft* forward pass at int2 is
+nearly free in hardware energy. This module exploits that: each decode slot
+drafts ``rc.spec_gamma`` candidate tokens per tick by running the **same
+weights** under a second, low-bit :class:`~repro.quant.policy.QuantPolicy`
+(``rc.draft_policy``, default ``*=int2``) against a **draft KV pool**, and the
+target model then judges all γ+1 positions of every slot in ONE
+chunked-prefill-shaped mixed step — the exact step shape
+``serve.scheduler.Scheduler`` already compiles for prompt chunks, now with
+``all_logits=True`` so no candidate position's distribution is discarded.
+Serial autoregressive decode (one target pass per token) becomes one target
+pass per *accepted run* of tokens.
+
+Key mechanics:
+
+- **Draft weight view** — :func:`repro.quant.surgery.draft_quant_view`
+  normalizes ``rc.draft_policy`` into a standalone RunConfig and, for
+  prequant draft rules, packs a second (policy-quantized) view of the same
+  float params. Dynamic draft policies reuse the target's float leaves — the
+  fused kernel quantizes on load at the draft width.
+- **Draft KV pool** — a full second cache tree at the draft policy's
+  numerics. The one :class:`~repro.serve.cache.BlockManager` backs *both*
+  pools: a page id addresses the same row in the target and draft pools, so
+  fork/rollback is a single ``truncate`` and preemption's ``release`` frees
+  both sides at once. Prefill chunks are mirrored into the draft pool (cheap
+  at the draft width) so a slot can draft from its first decode tick.
+- **Acceptance** — greedy exact-match at temperature 0 (every emitted token
+  is a target argmax, so the emitted sequence matches non-speculative greedy
+  decode); standard speculative rejection sampling otherwise, with
+  per-request ``fold_in(seed, rid, position, stream)`` keys
+  (``scheduler.request_keys``) so runs are reproducible under the ci.sh
+  determinism flags regardless of how ticks were packed.
+- **Energy attribution** — draft-pass cycles land in the SlotMeter's draft
+  bucket at the *draft* policy's bitwidths, verify cycles in the target
+  bucket at the target policy's; rejected candidates' cycles are never
+  subtracted, so ``core.report.spec_energy_summary`` reports an honest
+  energy-per-accepted-token including the waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models import init_caches
+from ..quant.capture import tree_totals_by_bits
+from .scheduler import (
+    STREAM_ACCEPT,
+    STREAM_DRAFT,
+    STREAM_RESIDUAL,
+    STREAM_SAMPLE,
+    build_mixed_step,
+    request_keys,
+    sample,
+)
+
+__all__ = [
+    "DraftRow",
+    "SpecDecoder",
+    "greedy_accept",
+    "rejection_accept",
+]
+
+
+@dataclass
+class DraftRow:
+    """One decode slot's inputs to a tick's draft phase."""
+
+    row: int                        # step-batch row index
+    rid: int                        # request id (PRNG stream)
+    pos: int                        # target live KV length at tick start
+    draft_pos: int                  # draft-pool live length at tick start
+    gap: list[int] = field(default_factory=list)  # committed tokens the draft
+    #                                 has not ingested (seq idx draft_pos..pos-1)
+    last_token: int = 0             # sequence token at index pos (not yet in KV)
+    g: int = 0                      # candidates to draft this tick (>= 1)
+
+
+def _softmax(logits: np.ndarray) -> np.ndarray:
+    x = logits.astype(np.float64) - float(logits.max())
+    e = np.exp(x)
+    return e / e.sum()
+
+
+def greedy_accept(props: list[int], argmax_row: np.ndarray) -> tuple[int, list[int]]:
+    """Temperature-0 acceptance: keep the longest prefix of proposals that
+    matches the target's per-position argmax, then emit the target's own
+    argmax at the first divergence (or the bonus position when everything
+    matched). ``argmax_row`` must cover positions 0..len(props). Every
+    emitted token is a target argmax — greedy speculative decode therefore
+    emits the same sequence as plain greedy decode."""
+    n = 0
+    for j, d in enumerate(props):
+        if int(argmax_row[j]) != int(d):
+            break
+        n += 1
+    return n, [int(t) for t in props[:n]] + [int(argmax_row[n])]
+
+
+def rejection_accept(
+    base_key,
+    rid: int,
+    pos0: int,
+    props: list[int],
+    p_logits: np.ndarray,
+    q_logits: np.ndarray,
+    temperature: float,
+) -> tuple[int, list[int]]:
+    """Standard speculative rejection sampling (Leviathan et al.) with
+    per-request folded PRNG keys.
+
+    ``p_logits`` (g+1, V) are the target's distributions over positions
+    pos0+1 .. pos0+g+1; ``q_logits`` (g, V) the draft's over pos0+1 ..
+    pos0+g. Candidate j is accepted with probability min(1, p(d)/q(d)); the
+    first rejection draws from the residual ``max(p - q, 0)`` and stops; a
+    clean sweep draws the bonus token from the target's next-position
+    distribution on the canonical STREAM_SAMPLE stream — exactly the key a
+    non-speculative run would have used at that position. The emitted
+    sequence is distributed identically to sampling from the target alone.
+    Returns (accepted_count, emitted_tokens)."""
+    g = len(props)
+    for j, d in enumerate(props):
+        p = _softmax(p_logits[j] / temperature)
+        q = _softmax(q_logits[j] / temperature)
+        k_acc = request_keys(base_key, [rid], [pos0 + 1 + j], STREAM_ACCEPT)[0]
+        u = float(jax.random.uniform(k_acc))
+        if u < min(1.0, float(p[d]) / max(float(q[d]), 1e-30)):
+            continue
+        resid = np.maximum(p - q, 0.0)
+        total = resid.sum()
+        dist = resid / total if total > 0.0 else p  # p==q: residual is empty
+        k_res = request_keys(base_key, [rid], [pos0 + 1 + j], STREAM_RESIDUAL)[0]
+        logp = np.full(dist.shape, -np.inf)
+        nz = dist > 0
+        logp[nz] = np.log(dist[nz])
+        t = int(jax.random.categorical(k_res, jnp.asarray(logp, jnp.float32)))
+        return j, [int(x) for x in props[:j]] + [t]
+    k_bonus = request_keys(base_key, [rid], [pos0 + g + 1], STREAM_SAMPLE)[0]
+    t = int(sample(k_bonus, jnp.asarray(p_logits[g]), temperature))
+    return g, [int(x) for x in props] + [t]
+
+
+class SpecDecoder:
+    """Draft-side state of the speculative engine: the policy-quantized
+    weight view, the draft KV pool, and the jitted draft step.
+
+    The host scheduler owns slots, block tables, and the target pool; this
+    object owns everything the *draft* pass needs and exposes three
+    operations — :meth:`mirror_prefill` (keep the draft pool in sync with
+    prompt chunks), :meth:`draft` (propose γ candidates per decode row), and
+    the two acceptance rules re-exported as methods. Draft step widths are
+    bounded (γ+1 catch-up, 1 steady-state, chunk mirror) so compiles stay
+    O(1) for the engine's lifetime."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        rc: RunConfig,
+        params: dict,
+        *,
+        max_batch: int,
+        capacity: int,
+        num_pages: int | None = None,
+        track_energy: bool = False,
+        draft_params: dict | None = None,
+    ):
+        from ..quant.surgery import draft_quant_view
+
+        if rc.spec_gamma < 1:
+            raise ValueError(f"spec_gamma must be >= 1, got {rc.spec_gamma}")
+        self.cfg, self.rc = cfg, rc
+        self.gamma = int(rc.spec_gamma)
+        self.max_batch = max_batch
+        self.track_energy = track_energy
+        # draft_params (when given) must be the ORIGINAL float tree — the
+        # launcher passes it before target-policy surgery packs any leaf
+        self.rc_draft, self.draft_params = draft_quant_view(
+            cfg, rc, params if draft_params is None else draft_params
+        )
+        if rc.kv_layout == "paged":
+            self.caches = init_caches(
+                cfg, self.rc_draft, max_batch, capacity, num_pages=num_pages
+            )
+        else:
+            self.caches = init_caches(cfg, self.rc_draft, max_batch, capacity)
+        self._step = jax.jit(
+            build_mixed_step(cfg, self.rc_draft, with_stats=track_energy),
+            donate_argnums=(1,),
+        )
+
+    def describe_draft(self) -> str:
+        from ..quant.policy import effective_policy
+
+        return effective_policy(self.rc_draft).describe()
+
+    # ------------------------------------------------------------- draft ops
+    def _run_step(self, toks, dpos, dlens, tables, events, rows):
+        """One draft mixed step; returns last-column logits (B, V) and, under
+        track_energy, appends (by_bits, {row: active-token weight}) to
+        ``events`` for SlotMeter draft-bucket attribution."""
+        out = self._step(
+            self.draft_params, self.caches,
+            jnp.asarray(toks), jnp.asarray(dpos), jnp.asarray(dlens), tables,
+        )
+        if not self.track_energy:
+            self.caches, logits = out
+            return logits
+        self.caches, logits, tree = out
+        by_bits = tree_totals_by_bits(tree)
+        total = float(sum(int(dlens[r.row]) for r in rows))
+        if by_bits and total > 0:
+            events.append(
+                (by_bits, {r.row: int(dlens[r.row]) / total for r in rows})
+            )
+        return logits
+
+    def mirror_prefill(self, tokens, pos, lens, tables) -> dict | None:
+        """Write one tick's prefill chunks into the draft KV pool (the same
+        rows/positions the target step processes; decode rows masked to
+        lens 0 by the caller). The draft logits are discarded — this pass
+        exists so the pool covers the prompt when drafting starts. Returns
+        the pass's per-bits cycle totals under track_energy."""
+        out = self._step(self.draft_params, self.caches, tokens, pos, lens, tables)
+        if not self.track_energy:
+            self.caches, _ = out
+            return None
+        self.caches, _, tree = out
+        return tree_totals_by_bits(tree)
+
+    def draft(
+        self, rows: list[DraftRow], tables, temperature: float, base_key
+    ) -> tuple[dict[int, list[int]], list[np.ndarray], list]:
+        """Propose up to γ candidates for every row, batched across rows.
+
+        The first step has width γ+1: it ingests each row's catch-up gap
+        plus its pending last token (per-row lens, exactly like a prefill
+        chunk); each subsequent step is width 1, feeding the candidate just
+        proposed. Proposals are argmax at temperature 0, otherwise
+        per-request STREAM_DRAFT categorical draws. Returns (proposals per
+        row, draft logits per step (B, V) for rejection sampling, metering
+        events)."""
+        B = self.max_batch
+        gmax = max(r.g for r in rows)
+        toks = np.zeros((B, self.gamma + 1), np.int32)
+        dpos = np.zeros(B, np.int32)
+        dlens = np.zeros(B, np.int32)
+        for r in rows:
+            feed = list(r.gap) + [r.last_token]
+            if len(feed) > self.gamma + 1:
+                raise AssertionError(
+                    f"row {r.row}: draft gap {len(r.gap)} exceeds the "
+                    f"catch-up width (scheduler must mark the slot stale)"
+                )
+            toks[r.row, : len(feed)] = feed
+            dpos[r.row] = r.draft_pos
+            dlens[r.row] = len(feed)
+        events: list = []
+        logits = self._run_step(toks, dpos, dlens, tables, events, rows)
+
+        proposals: dict[int, list[int]] = {r.row: [] for r in rows}
+        qlogits: list[np.ndarray] = []
+        for j in range(1, gmax + 1):
+            if temperature > 0.0:
+                # rejection sampling needs the draft's full distributions;
+                # greedy acceptance never reads them — skip the host copy
+                qlogits.append(np.asarray(logits, np.float32))
+            if temperature <= 0.0:
+                cand = np.asarray(jnp.argmax(logits, axis=-1))
+            else:
+                rids = np.zeros(B, np.int32)
+                posn = np.zeros(B, np.int32)
+                for r in rows:
+                    rids[r.row] = r.rid
+                    posn[r.row] = r.pos + j
+                keys = request_keys(base_key, rids, posn, STREAM_DRAFT)
+                cand = np.asarray(sample(keys, logits, temperature))
+            for r in rows:
+                if r.g >= j:
+                    proposals[r.row].append(int(cand[r.row]))
+            if j == gmax:
+                break
+            live = [r for r in rows if r.g > j]
+            t1 = np.zeros((B, 1), np.int32)
+            p1 = np.zeros(B, np.int32)
+            l1 = np.zeros(B, np.int32)
+            for r in live:
+                t1[r.row, 0] = int(cand[r.row])
+                p1[r.row] = r.pos + j
+                l1[r.row] = 1
+            logits = self._run_step(t1, p1, l1, tables, events, live)
+        return proposals, qlogits, events

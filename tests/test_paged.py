@@ -179,13 +179,16 @@ def test_paged_write_read_matches_dense():
     st.integers(2, 5),     # slots
     st.integers(1, 10),    # pool pages
     st.lists(
-        st.tuples(st.integers(0, 4), st.integers(0, 2), st.integers(1, 7)),
+        st.tuples(st.integers(0, 4), st.integers(0, 3), st.integers(1, 7)),
         min_size=1, max_size=40,
     ),
 )
 def test_block_manager_invariants(bs, slots, pages, ops):
-    """Random allocate/extend/release interleavings: no double-free, no
-    orphaned pages, peak pages ≤ pool, failed extends leave state intact."""
+    """Random allocate/extend/truncate/release interleavings (the full
+    submit/append/rollback/free alphabet speculative decoding exercises):
+    free list ⊎ allocated pages always partition the pool, no slot's table
+    references a freed page, peak pages ≤ pool, failed extends leave state
+    intact, and truncation frees exactly the pages past the new length."""
     capacity = bs * 6
     mgr = BlockManager(pages, bs, slots, capacity)
     lens = [0] * slots
@@ -201,16 +204,42 @@ def test_block_manager_invariants(bs, slots, pages, ops):
         elif op == 1:
             mgr.release(slot)
             lens[slot] = 0
-        else:  # refill: release then immediately re-extend
+        elif op == 2:  # refill: release then immediately re-extend
             mgr.release(slot)
             lens[slot] = 0
             if mgr.extend(slot, min(amount, mgr.max_blocks * bs)):
                 lens[slot] = min(amount, mgr.max_blocks * bs)
+        else:  # speculative rollback: shrink by `amount` tokens
+            new_len = max(lens[slot] - amount, 0)
+            kept = mgr.blocks_of(slot)[: -(-new_len // bs)] if new_len else []
+            mgr.truncate(slot, new_len)
+            lens[slot] = new_len
+            # the surviving prefix keeps its pages, in order
+            assert mgr.blocks_of(slot) == kept
         mgr.check_invariants()
         assert mgr.high_water <= mgr.num_pages
         # every slot backed by enough pages for its length
         for s in range(slots):
             assert len(mgr.blocks_of(s)) * bs >= lens[s]
+
+
+def test_block_manager_truncate_unit():
+    """Rollback frees exactly the pages past the new high block, reuses them
+    LIFO, and refuses to grow."""
+    mgr = BlockManager(6, 4, 2, 24)
+    assert mgr.extend(0, 10)                   # 3 pages
+    p0 = mgr.blocks_of(0)
+    mgr.truncate(0, 5)                         # ceil(5/4)=2 pages survive
+    assert mgr.blocks_of(0) == p0[:2]
+    assert mgr.pages_in_use == 2
+    assert p0[2] in mgr.free
+    with pytest.raises(ValueError):
+        mgr.truncate(0, 6)                     # rollback cannot grow
+    assert mgr.extend(0, 12)                   # freed page comes back first
+    assert mgr.blocks_of(0) == p0
+    mgr.truncate(0, 0)                         # full rollback
+    assert mgr.blocks_of(0) == [] and mgr.pages_in_use == 0
+    mgr.check_invariants()
 
 
 # ----------------------------------------------------------------- scheduler

@@ -285,6 +285,22 @@ def test_describe_round_trips_all_tokens():
     assert "unfused" in p.describe() and "stats" in p.describe()
 
 
+def test_per_token_flag_round_trips_and_resolves():
+    """The per_token grammar flag lowers to GemmBackend(act_scale="token")
+    and survives describe()/to_json() round trips (DESIGN.md §9)."""
+    p = QuantPolicy.parse("attn.*=int8:per_token,*=int2:per_token")
+    assert p.resolve("attn.q").act_scale == "token"
+    assert p.resolve("mlp.down").act_scale == "token"
+    assert QuantPolicy.parse(p.describe()) == p
+    assert "per_token" in p.describe()
+    assert QuantPolicy.from_json(p.to_json()) == p
+    # default stays per-tensor (off-path numerics untouched)
+    q = QuantPolicy.parse("*=int8")
+    assert q.resolve("attn.q").act_scale == "tensor"
+    with pytest.raises(PolicyError, match="act_scale"):
+        LayerRule("*", 8, act_scale="row")
+
+
 def test_compile_table_resolves_by_name_not_last_path():
     """Two scan groups share the runtime name attn.q; a path rule hitting
     one group must not hijack the name's table entry (the packed leaf's
@@ -393,6 +409,7 @@ _RULES = st.builds(
     fused=st.booleans(),
     impl=st.sampled_from(["auto", "xla"]),
     collect_stats=st.booleans(),
+    act_scale=st.sampled_from(["tensor", "token"]),
 )
 _POLICIES = st.builds(
     QuantPolicy,
