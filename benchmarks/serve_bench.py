@@ -30,9 +30,11 @@ import numpy as np
 
 from repro.configs.base import RunConfig, get_config
 from repro.models import init
-from repro.serve import Engine, Request, Scheduler
+from repro.serve import AdmissionController, Engine, Request, Scheduler
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_serve.json")
+OUT_ROBUST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "BENCH_robust.json")
 
 
 def bursty_trace(rng, *, requests, min_prompt, max_prompt, burst, gap, max_new):
@@ -112,6 +114,86 @@ def run_scheduler(cfg, rc, params, trace, *, capacity, max_batch, num_pages=None
     return out
 
 
+def run_overload(cfg, rc, params, *, capacity, max_batch, num_pages,
+                 requests, max_new, chunk):
+    """Overload scenario (DESIGN.md §10): sustained admissions at ~2x the
+    engine's service rate, mixed priority classes and two tenants (one
+    budget-capped), binding TTLs. The engine must keep nonzero goodput with
+    ZERO engine stalls — overload is absorbed by the admission controller
+    and the degradation ladder, never by the engine falling over."""
+    rng = np.random.default_rng(1)
+    # service rate ~ max_batch requests per (decode ticks + prefill ticks);
+    # admit one request every `gap` ticks at double that rate
+    avg_chunks = 2.0                      # prompts average ~2 prefill chunks
+    service = max_batch / (max_new + avg_chunks)
+    gap = max(1, round(1.0 / (2.0 * service)))
+
+    pris = ["realtime", "interactive", "batch"]
+    arrivals = []
+    for rid in range(requests):
+        plen = int(rng.integers(chunk, 3 * chunk + 1))
+        r = Request(rid=rid, prompt=rng.integers(0, 256, plen).tolist(),
+                    max_new=max_new)
+        r.priority = pris[rid % 3]
+        r.tenant = f"t{rid % 2}"
+        arrivals.append((rid * gap, r))
+    # tenant t1 gets ~60% of its demand — OVER_BUDGET must actually bind
+    t1_demand = sum(len(r.prompt) + r.max_new for _, r in arrivals
+                    if r.tenant == "t1")
+    horizon = max_new + 3 * chunk
+    adm = AdmissionController(
+        max_queue=2 * max_batch,
+        tenant_budgets={"t1": int(0.6 * t1_demand)},
+        default_ttl={"realtime": 3 * horizon, "interactive": 6 * horizon,
+                     "batch": 12 * horizon},
+    )
+    eng = Scheduler(cfg, rc, params, capacity=capacity, max_batch=max_batch,
+                    num_pages=num_pages, admission=adm)
+    pending = list(arrivals)
+    t0 = time.perf_counter()
+    step = 0
+    while step < 10_000:
+        while pending and pending[0][0] <= step:
+            eng.submit(pending.pop(0)[1])
+        ran = eng.tick()
+        if not ran and not pending and not eng.queue:
+            break
+        step += 1
+    jax.effects_barrier()
+    wall = time.perf_counter() - t0
+
+    h = eng.health()
+    done = [r for _, r in arrivals if r.done]
+    toks = sum(len(r.out) for r in done)
+    in_deadline = h["completed"] - h["deadline_misses"]
+    occ = h["ladder"]["occupancy"]
+    total_occ = max(sum(occ.values()), 1)
+    row = {
+        "admission_gap_ticks": gap,
+        "overload_factor": 2.0,
+        "requests": requests,
+        "wall_s": wall,
+        "clock_ticks": h["clock"],
+        "completed": h["completed"],
+        "completed_in_deadline": in_deadline,
+        "generated_tokens": toks,
+        "goodput_requests_per_s": in_deadline / wall if wall else 0.0,
+        "goodput_tokens_per_s": toks / wall if wall else 0.0,
+        "deadline_miss_rate": h["deadline_misses"] / max(h["admitted"], 1),
+        "rejections": h["rejections"],
+        "preemptions": h["preemptions"],
+        "stall_episodes": h["stall_episodes"],
+        "engine_stalls": h["engine_stalls"],
+        "ladder_transitions": len(h["ladder"]["transitions"]),
+        "ladder_occupancy": {k: v / total_occ for k, v in occ.items()},
+    }
+    # every submitted request must have reached a terminal state
+    unresolved = [r.rid for _, r in arrivals
+                  if not r.done and r.rejected is None]
+    row["unresolved"] = len(unresolved)
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b_smoke")
@@ -174,6 +256,36 @@ def main(argv=None):
                  / max(rows["scheduler_dense"]["cold"]["cache_bytes_reserved"], 1))
     print(f"[serve_bench] paged-vs-legacy speedup: {speedup_cold:.2f}x cold, "
           f"{speedup_warm:.2f}x warm; live cache = {mem_ratio:.2f}x of dense pool")
+
+    # ---- overload scenario: 2x sustained admission rate, paged layout
+    overload = run_overload(
+        cfg, rc_paged, params, capacity=args.capacity,
+        max_batch=args.max_batch, num_pages=pool,
+        requests=3 * args.requests, max_new=args.max_new,
+        chunk=args.prefill_chunk,
+    )
+    print(f"[serve_bench] overload 2x: goodput "
+          f"{overload['goodput_requests_per_s']:.2f} req/s "
+          f"({overload['goodput_tokens_per_s']:.1f} tok/s), "
+          f"miss rate {overload['deadline_miss_rate']:.2f}, "
+          f"rejections {overload['rejections']}, "
+          f"engine_stalls {overload['engine_stalls']}, "
+          f"unresolved {overload['unresolved']}")
+    if overload["engine_stalls"] or overload["unresolved"]:
+        raise SystemExit("[serve_bench] overload scenario FAILED: engine "
+                         "stalled or requests left unresolved")
+    if not args.fast:
+        robust = {
+            "arch": args.arch,
+            "scenario": {"max_batch": args.max_batch,
+                         "capacity": args.capacity, "max_new": args.max_new,
+                         "prefill_chunk": args.prefill_chunk,
+                         "pool_pages": pool},
+            "overload": overload,
+        }
+        with open(OUT_ROBUST, "w") as f:
+            json.dump(robust, f, indent=1)
+        print(f"[serve_bench] wrote {OUT_ROBUST}")
 
     if not args.fast:
         out = {

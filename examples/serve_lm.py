@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import RunConfig, get_config
 from repro.models import init
-from repro.serve import Engine, Request, Scheduler
+from repro.serve import Engine, Request, Scheduler, install_sigint_drain
 
 
 def main(argv=None):
@@ -73,8 +73,15 @@ def main(argv=None):
             for rid in range(args.requests)]
     for r in reqs:
         eng.submit(r)
+    # graceful shutdown: ^C drains active slots (partial outputs and energy
+    # meters survive), a second ^C aborts hard
+    restore = install_sigint_drain(eng) if args.engine == "scheduler" else None
     t0 = time.perf_counter()
-    eng.run()
+    try:
+        eng.run()
+    finally:
+        if restore is not None:
+            restore()
     dt = time.perf_counter() - t0
     # count over the submitted requests — the legacy engine's run() returns
     # only the slot residents, a fraction of the trace
@@ -95,8 +102,13 @@ def main(argv=None):
                   f"({s['accepted_draft_tokens']}/{s['drafted_tokens']} drafts)")
     for r in done:
         print(f"  req {r.rid}: {len(r.out)} tokens {r.out[:6]}...")
-    assert all(len(r.out) >= args.max_new for r in done)
-    print("[serve_lm] OK")
+    if args.engine == "scheduler" and eng.draining:
+        h = eng.health()
+        print(f"[serve_lm] drained: completed={h['completed']} "
+              f"rejections={h['rejections']} (partial outputs kept)")
+    else:
+        assert all(len(r.out) >= args.max_new for r in done)
+        print("[serve_lm] OK")
 
 
 if __name__ == "__main__":

@@ -37,6 +37,16 @@ echo "== serve smoke (paged KV + chunked-prefill scheduler)"
 python -m pytest -x -q -p no:randomly tests/test_paged.py
 python benchmarks/serve_bench.py --fast
 
+echo "== chaos smoke (fault injection: fixed-seed fast subset)"
+# the deterministic robustness gate (DESIGN.md §10): admission/ladder unit
+# tests plus the fixed-seed chaos runs — greedy bit-exactness under induced
+# faults, allocator partition, graceful drain, 2x-overload shedding. The
+# broader hypothesis random_schedules sweep stays out of the smoke path.
+python -m pytest -x -q -p no:randomly tests/test_chaos.py \
+    -k "not random_schedules"
+# overload scenario rides the serve bench fast run above (it hard-fails on
+# engine stalls or unresolved requests)
+
 echo "== spec smoke (speculative int2-draft decode, gamma=2 greedy)"
 # greedy spec-vs-plain conformance + rollback invariants, then the tiny
 # gamma=2 bench (which itself asserts the emitted sequences match the

@@ -166,6 +166,11 @@ class RunConfig:
     # 0 = off (the scheduler's plain path, bit-identical to pre-spec builds).
     spec_gamma: int = 0
     draft_policy: object = None      # QuantPolicy | grammar str (None -> "*=int2")
+    # robustness (serve/admission.py, DESIGN.md §10): policy used by the
+    # numerical-fault quarantine's fallback step, and how many consecutive
+    # clean ticks relax the degradation ladder one level.
+    fallback_policy: object = "*=bf16"   # QuantPolicy | grammar str
+    ladder_relax_ticks: int = 4
     # sharding rule overrides: logical axis -> mesh axis name(s) or None
     sharding_overrides: dict = field(default_factory=dict)
 

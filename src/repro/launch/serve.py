@@ -18,7 +18,13 @@ import numpy as np
 from ..configs.base import RunConfig, get_config
 from ..models import init
 from ..parallel.sharding import use_mesh
-from ..serve import Engine, Request, Scheduler
+from ..serve import (
+    AdmissionController,
+    Engine,
+    Request,
+    Scheduler,
+    install_sigint_drain,
+)
 from .mesh import make_local_mesh
 
 
@@ -59,6 +65,20 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    # robustness / admission control (scheduler engine; DESIGN.md §10)
+    ap.add_argument("--queue-bound", type=int, default=0,
+                    help="per-class admission queue bound (0 = unbounded)")
+    ap.add_argument("--ttl-ticks", type=int, default=0,
+                    help="per-request TTL in scheduler ticks (0 = none); "
+                         "expired work is shed before it runs")
+    ap.add_argument("--tenant-budget", type=int, default=0,
+                    help="token budget for the 'default' tenant (0 = none)")
+    ap.add_argument("--priority", default="interactive",
+                    choices=["realtime", "interactive", "batch"],
+                    help="priority class for the synthetic requests")
+    ap.add_argument("--energy", action="store_true",
+                    help="track per-request SlotMeter energy and print the "
+                         "summary at exit (survives a SIGINT drain)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -106,12 +126,19 @@ def main(argv=None):
 
         params = apply_surgery(cfg, rc, params)
         if use_scheduler:
+            adm = AdmissionController(
+                max_queue=args.queue_bound or None,
+                tenant_budgets=({"default": args.tenant_budget}
+                                if args.tenant_budget else None),
+                default_ttl=args.ttl_ticks or None,
+            )
             eng = Scheduler(
                 cfg, rc, params,
                 capacity=args.capacity, max_batch=args.max_batch,
                 num_pages=args.num_pages or None,
                 temperature=args.temperature, seed=args.seed,
                 draft_params=draft_params,
+                admission=adm, track_energy=args.energy,
             )
         else:
             eng = Engine(
@@ -119,11 +146,24 @@ def main(argv=None):
                 capacity=args.capacity, max_batch=args.max_batch,
                 temperature=args.temperature, seed=args.seed,
             )
+        rejected = 0
         for rid in range(args.requests):
             prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
-            eng.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+            req = Request(rid=rid, prompt=prompt, max_new=args.max_new)
+            if use_scheduler:
+                req.priority = args.priority
+                rejected += eng.submit(req) is not None
+            else:
+                eng.submit(req)
+        # graceful shutdown: first ^C drains active slots (energy summaries
+        # and health counters survive), second ^C aborts hard
+        restore = install_sigint_drain(eng) if use_scheduler else None
         t0 = time.perf_counter()
-        done = eng.run()
+        try:
+            done = eng.run()
+        finally:
+            if restore is not None:
+                restore()
         dt = time.perf_counter() - t0
 
     toks = sum(len(r.out) for r in done)
@@ -133,11 +173,24 @@ def main(argv=None):
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     if use_scheduler:
         print(f"  cache: {eng.cache_stats()}")
+        h = eng.health()
+        print(f"  health: ladder={h['ladder']['name']} "
+              f"(transitions={len(h['ladder']['transitions'])}) "
+              f"completed={h['completed']} rejected={h['rejections']} "
+              f"preemptions={h['preemptions']} "
+              f"deadline_misses={h['deadline_misses']} "
+              f"stall_episodes={h['stall_episodes']} "
+              f"engine_stalls={h['engine_stalls']}"
+              + (" [drained]" if h["draining"] else ""))
         if rc.spec_gamma:
             s = eng.spec_summary()
             print(f"  spec: gamma={s['spec_gamma']} draft={s['draft_policy']} "
                   f"acceptance={s['acceptance_rate']:.2f} "
                   f"({s['accepted_draft_tokens']}/{s['drafted_tokens']} drafts)")
+        if args.energy:
+            for m in eng.energy_summary():
+                print(f"  energy: rid={m['rid']} tokens={m['tokens']} "
+                      f"cycles={m['cycles']:.3g} energy_j={m['energy_j']:.3g}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

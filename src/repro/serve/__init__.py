@@ -7,25 +7,42 @@
   rc.spec_gamma > 0)
 - serve.spec: int-low self-drafting + batched-verify speculative decoding
   (draft QuantPolicy weight view, draft KV pool, acceptance rules)
+- serve.admission: admission control (priority classes, tenant budgets,
+  TTLs) + the overload degradation ladder (DESIGN.md §10)
+- serve.faults: deterministic seed-keyed fault injection for chaos testing
 - serve.engine: legacy dense-slot Engine (bit-exact A/B baseline; SSM/hybrid)
 """
 
+from .admission import (
+    AdmissionController,
+    DegradationLadder,
+    Rejection,
+    RejectReason,
+)
 from .cache import BlockManager, num_pages_for
 from .engine import Engine, build_decode, build_prefill
+from .faults import FaultEvent, FaultPlan
 from .scheduler import (
     Request,
     Scheduler,
     SlotMeter,
     build_mixed_step,
+    install_sigint_drain,
     request_keys,
     sample,
 )
 from .spec import SpecDecoder, greedy_accept, rejection_accept
 
 __all__ = [
+    "AdmissionController",
     "BlockManager",
+    "DegradationLadder",
     "num_pages_for",
     "Engine",
+    "FaultEvent",
+    "FaultPlan",
+    "Rejection",
+    "RejectReason",
     "Request",
     "Scheduler",
     "SlotMeter",
@@ -34,6 +51,7 @@ __all__ = [
     "build_mixed_step",
     "build_prefill",
     "greedy_accept",
+    "install_sigint_drain",
     "rejection_accept",
     "request_keys",
     "sample",

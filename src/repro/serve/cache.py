@@ -53,6 +53,12 @@ class BlockManager:
                 f"capacity {capacity} must be a multiple of block_size {block_size} "
                 "(the paged view must span exactly the dense capacity for A/B)"
             )
+        # fault-injection hook (serve/faults.py): ``hook(slot, new_len) ->
+        # True`` forces the NEXT extend to report allocation failure without
+        # mutating any state — exactly the contract a real failed allocation
+        # has, so chaos tests can induce pool exhaustion deterministically.
+        self.fault_hook = None
+        self.injected_failures = 0
         self.num_pages = num_pages
         self.block_size = block_size
         self.max_blocks = capacity // block_size
@@ -83,6 +89,9 @@ class BlockManager:
         ``block_size - 1`` times out of ``block_size``."""
         if new_len > self.max_blocks * self.block_size:
             raise ValueError(f"slot {slot}: {new_len} tokens > table capacity")
+        if self.fault_hook is not None and self.fault_hook(slot, new_len):
+            self.injected_failures += 1
+            return False
         have = int(self.blocks_used[slot])
         need = -(-new_len // self.block_size)
         if need - have > len(self.free):

@@ -27,10 +27,24 @@ chunks in the batch the even split would overcharge decode rows by up to
 ``chunk×``. Per-row exact attribution still does not exist in the hardware
 (the GEMM M axis is the packed pool and the unit drains max-over-rows);
 token weighting is the documented approximation.
+
+Robustness (DESIGN.md §10): admission flows through
+``serve.admission.AdmissionController`` (priority classes, tenant budgets,
+per-request tick deadlines, bounded queues), overload walks ONE ordered
+``DegradationLadder`` (degrade spec-γ → shrink prefill budget → preempt
+lowest-priority-youngest → shed expired/batch → reject admissions), and the
+whole state is observable via :meth:`Scheduler.health`. A seed-keyed
+``serve.faults.FaultPlan`` can induce allocation failures, preemption
+storms, draft staleness, and NaN logits against the scheduler's logical
+``clock``; a numerical guard quarantines any slot whose step logits go
+non-finite, retries it clean, and escalates to a ``rc.fallback_policy``
+(bf16) step if the fault persists. Faults change *scheduling*, never
+*results* (tests/test_chaos.py).
 """
 
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 
 import jax
@@ -43,6 +57,14 @@ from ..models import KVView, forward, init_caches, lm_logits
 from ..models.transformer import plan_groups
 from ..quant import capture as stats_capture
 from ..quant.capture import tree_totals_by_bits
+from .admission import (
+    LADDER_LEVELS,
+    PRIORITY_RANK,
+    AdmissionController,
+    DegradationLadder,
+    Rejection,
+    RejectReason,
+)
 from .cache import BlockManager, num_pages_for
 
 __all__ = [
@@ -50,9 +72,12 @@ __all__ = [
     "SlotMeter",
     "Scheduler",
     "build_mixed_step",
+    "install_sigint_drain",
     "request_keys",
     "sample",
 ]
+
+log = logging.getLogger("repro.serve")
 
 
 # PRNG stream tags folded into per-request keys: the token sampled at one
@@ -103,6 +128,19 @@ class Request:
     max_new: int = 32
     out: list[int] = field(default_factory=list)
     done: bool = False
+    # robustness metadata (serve/admission.py). ``priority`` is one of
+    # realtime | interactive | batch; ``ttl_ticks`` is a deadline relative to
+    # submission on the scheduler's logical clock (None = no deadline);
+    # ``tenant`` keys per-tenant token budgets. Terminal state is exactly one
+    # of ``done`` (completed) or ``rejected`` (a structured
+    # admission.Rejection) — never silence.
+    tenant: str = "default"
+    priority: str = "interactive"
+    ttl_ticks: int | None = None
+    deadline: int | None = None      # absolute clock deadline (set at submit)
+    submitted_tick: int = 0
+    admitted: bool = False           # ever held a slot (preemption re-queues stay True)
+    rejected: Rejection | None = None
 
 
 @dataclass
@@ -288,11 +326,19 @@ class _Slot:
     # boundaries). The gap is normally 0 or 1 token — exactly the previous
     # tick's last accepted candidate when all γ were accepted — and is
     # bounded by γ: a slot that falls further behind (repeated pool-pressure
-    # ticks with no draft budget) goes draft_stale and plain-decodes from
-    # then on rather than growing unbounded catch-up state.
+    # ticks with no draft budget) goes draft_stale and plain-decodes rather
+    # than growing unbounded catch-up state. Once the ladder is healthy
+    # again the scheduler re-syncs the draft pool in chunk-width passes
+    # (committed tokens re-ingested at the draft width) and clears the flag.
     draft_pos: int = 0
     draft_gap: list[int] = field(default_factory=list)
     draft_stale: bool = False
+    # numerical-fault quarantine (DESIGN.md §10): consecutive non-finite
+    # logits strikes, and whether the row has been switched to the fallback
+    # (bf16-policy) step. Fallback is sticky — a model that NaNs at low bits
+    # will NaN again, so ping-ponging back would just burn retry ticks.
+    retries: int = 0
+    fallback: bool = False
 
     @property
     def prefilling(self) -> bool:
@@ -321,6 +367,8 @@ class Scheduler:
         seed: int = 0,
         track_energy: bool = False,
         draft_params: dict | None = None,
+        admission: AdmissionController | None = None,
+        faults=None,
     ):
         for g in plan_groups(cfg):
             for kind in g.kinds:
@@ -374,7 +422,6 @@ class Scheduler:
                 donate_argnums=(1,),
             )
         self.slots: list[_Slot | None] = [None] * max_batch
-        self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.finished_meters: list[SlotMeter] = []
         self.final_kv_lens: dict[int, int] = {}   # rid -> live KV at finish
@@ -389,19 +436,66 @@ class Scheduler:
         self._tables_version = -1        # ... keyed on mgr.version
         self._rr = 0                     # rotating plan start (fairness)
 
+        # --- robustness layer (DESIGN.md §10) ---
+        self.admission = admission if admission is not None else AdmissionController()
+        self.ladder = DegradationLadder(relax_after=rc.ladder_relax_ticks)
+        self.faults = faults             # serve.faults.FaultPlan | None
+        self.clock = 0                   # logical time: +1 per tick() call,
+        #                                  even idle ones — deadlines and
+        #                                  fault plans key on it
+        self.draining = False            # graceful shutdown: no new admissions
+        self.deadline_misses = 0         # completions past their deadline
+        self.stalled_rows_total = 0      # row-ticks lost to pool exhaustion
+        self.stall_episodes = 0          # distinct pressure episodes
+        self._in_stall = False
+        self.engine_stalls = 0           # active slots + nothing schedulable
+        #                                  + no injected fault (must stay 0)
+        self.idle_fault_ticks = 0        # ticks idled by injected exhaustion
+        self.nan_events = 0              # non-finite logit rows quarantined
+        self.fallback_retries = 0        # rows escalated to the bf16 step
+        self.draft_stale_events = 0      # slots entering draft staleness
+        self.draft_resyncs = 0           # stale slots recovered via resync
+        self.nan_retry_limit = 1         # clean retries before bf16 fallback
+        self._fault_fired = False        # injected alloc failure this tick
+        self._stall_this_tick = False
+        self._fb_step = None             # lazily-built fallback-policy step
+        self._fb_unavailable = False
+        if self.mgr is not None and self.faults is not None:
+            self.mgr.fault_hook = self._alloc_fault_hook
+
     # ---------------------------------------------------------------- admin
-    def submit(self, req: Request) -> None:
+    @property
+    def queue(self) -> list[Request]:
+        """Pop-order view of the admission queues (read-only back-compat —
+        mutate through ``submit`` / the AdmissionController)."""
+        return self.admission.pending_list()
+
+    def submit(self, req: Request) -> Rejection | None:
+        """Admit through the AdmissionController. Returns None when queued,
+        else the structured :class:`~repro.serve.admission.Rejection` (also
+        stored on ``req.rejected``). Oversized prompts still raise — that is
+        a caller bug, not load."""
         if len(req.prompt) > self.capacity - 1:
             raise ValueError(
                 f"request {req.rid}: prompt of {len(req.prompt)} tokens "
                 f"exceeds capacity {self.capacity} - 1"
             )
-        self.queue.append(req)
+        return self.admission.submit(req, self.clock)
+
+    def begin_drain(self) -> None:
+        """Graceful shutdown: stop admitting new work (structured
+        SHUTTING_DOWN rejections), let active slots — and preempted work
+        that already ran — finish, then ``run()`` flushes whatever is still
+        queued. SlotMeters survive the drain (energy_summary stays valid)."""
+        self.draining = True
+        self.admission.draining = True
 
     def _admit(self) -> None:
         for i, sl in enumerate(self.slots):
-            if sl is None and self.queue:
-                req = self.queue.pop(0)
+            if sl is None:
+                req = self.admission.pop(self.clock, readmit_only=self.draining)
+                if req is None:
+                    break
                 meter = None
                 if self.track_energy:
                     # a preempted request resumes its existing meter: the
@@ -421,6 +515,8 @@ class Scheduler:
     def _finish(self, i: int) -> None:
         sl = self.slots[i]
         sl.req.done = True
+        if sl.req.deadline is not None and self.clock > sl.req.deadline:
+            self.deadline_misses += 1
         self.finished.append(sl.req)
         self.final_kv_lens[sl.req.rid] = sl.pos
         if sl.meter is not None:
@@ -430,36 +526,102 @@ class Scheduler:
             self.mgr.release(i)
         self.slots[i] = None
 
+    def _shed_slot(self, i: int, reason: str, detail: str = "") -> None:
+        """Terminate an *active* slot with a structured rejection (e.g. a
+        numerical fault with no fallback path). Pages are released; the
+        request is terminal — rejected, never silently dropped."""
+        sl = self.slots[i]
+        r = Rejection(rid=sl.req.rid, reason=reason, detail=detail,
+                      tick=self.clock)
+        sl.req.rejected = r
+        self.admission.rejections.append(r)
+        self.admission.sheds += 1
+        if sl.meter is not None:
+            self.finished_meters.append(sl.meter)
+            self._meters_by_rid.pop(sl.req.rid, None)
+        if self.mgr is not None:
+            self.mgr.release(i)
+        self.slots[i] = None
+
     def _preempt_one(self) -> bool:
-        """Recompute-preemption under pool pressure: release the youngest
-        slot's pages and requeue it at the front; its effective prompt
-        (original + generated so far) is re-prefilled on readmission. Never
-        preempts the last active slot (it must be able to drain)."""
+        """Recompute-preemption under pool pressure (ladder level 3):
+        release the lowest-priority-youngest slot's pages and requeue it at
+        the front of its class; its effective prompt (original + generated
+        so far) is re-prefilled on readmission. Never preempts the last
+        active slot (it must be able to drain)."""
         cand = [i for i, s in enumerate(self.slots) if s is not None]
         if len(cand) <= 1:
             return False
-        i = max(cand, key=lambda j: self.slots[j].admit_seq)
+        i = max(cand, key=lambda j: (PRIORITY_RANK[self.slots[j].req.priority],
+                                     self.slots[j].admit_seq))
         sl = self.slots[i]
         if self.mgr is not None:
             self.mgr.release(i)
-        self.queue.insert(0, sl.req)
+        self.admission.requeue_front(sl.req)
         self.slots[i] = None
         self.preemptions += 1
+        self.ladder.escalate_to(self.clock, 3, "preemption")
         return True
+
+    # ---------------------------------------------------------- fault hooks
+    def _alloc_fault_hook(self, slot: int, new_len: int) -> bool:
+        """BlockManager hook: injected page-allocation failure for
+        (clock, slot) pairs named by the fault plan."""
+        if self.faults.fires(self.clock, "alloc_fail", slot):
+            self._fault_fired = True
+            return True
+        return False
+
+    def _apply_tick_faults(self) -> None:
+        """Tick-start faults: forced preemption storms and draft staleness.
+        (alloc_fail fires inside BlockManager.extend; nan_logits after the
+        step.)"""
+        for ev in self.faults.at(self.clock, "preempt_storm"):
+            for _ in range(ev.arg):
+                if not self._preempt_one():
+                    break
+        for ev in self.faults.at(self.clock, "draft_stale"):
+            sl = self.slots[ev.arg % self.max_batch]
+            if sl is not None and self.spec is not None and not sl.draft_stale:
+                sl.draft_stale = True
+                sl.draft_gap = []
+                self.draft_stale_events += 1
+
+    def _note_stall(self, stalled: int) -> None:
+        """Satellite fix: pool-exhaustion row stalls used to skip the tick
+        silently. Count them, escalate the ladder, and log once per
+        pressure episode (not once per tick — a long episode is one event)."""
+        self.stalled_rows_total += stalled
+        self._stall_this_tick = True
+        self.ladder.note_pressure(self.clock, "alloc_stall", ceil=3)
+        if not self._in_stall:
+            self.stall_episodes += 1
+            self._in_stall = True
+            pool = (f"{self.mgr.pages_in_use}/{self.mgr.num_pages} pages"
+                    if self.mgr is not None else "dense layout")
+            log.warning(
+                "scheduler: %d row(s) stalled at pool exhaustion "
+                "(clock %d, %s, ladder -> %s; episode %d)",
+                stalled, self.clock, pool,
+                self.ladder.snapshot()["name"], self.stall_episodes,
+            )
 
     # ----------------------------------------------------------------- tick
     def _plan(self):
         """Fill one tick's rows under the token budget: decode rows first
         (a burst of admissions must never stall decodes), then prompt
-        chunks FIFO. Rows whose page allocation fails stall this tick.
-        Slots are scanned in a per-tick rotated order so a budget tighter
-        than the active row count round-robins instead of starving the
-        high-index rows."""
+        chunks FIFO. Rows whose page allocation fails stall this tick —
+        counted and reported (``stalled``), never silent. Slots are scanned
+        in a per-tick rotated order so a budget tighter than the active row
+        count round-robins instead of starving the high-index rows. Under
+        pressure (ladder level >= 2) the prefill portion of the budget
+        shrinks — decode rows, which release pages soonest, keep priority."""
         rows, W = self.max_batch, self.chunk
         tokens = np.zeros((rows, W), np.int32)
         pos = np.zeros(rows, np.int32)
         lens = np.zeros(rows, np.int32)
         budget = self.token_budget
+        stalled = 0
         decode_rows: list[int] = []
         prefill_rows: list[int] = []
         order = [(self._rr + k) % rows for k in range(rows)]
@@ -470,23 +632,26 @@ class Scheduler:
             pos[i] = sl.pos
             if not sl.prefilling and budget > 0:
                 if self.mgr is not None and not self.mgr.extend(i, sl.pos + 1):
-                    continue  # pool exhausted — row stalls this tick
+                    stalled += 1  # pool exhausted — row stalls this tick
+                    continue
                 tokens[i, 0] = sl.last_token
                 lens[i] = 1
                 budget -= 1
                 decode_rows.append(i)
+        pbudget = min(budget, self.ladder.prefill_budget(self.token_budget, W))
         for i in order:
             sl = self.slots[i]
-            if sl is None or lens[i] or not sl.prefilling or budget <= 0:
+            if sl is None or lens[i] or not sl.prefilling or pbudget <= 0:
                 continue
-            n = min(W, len(sl.prompt) - sl.pos, budget)
+            n = min(W, len(sl.prompt) - sl.pos, pbudget)
             if self.mgr is not None and not self.mgr.extend(i, sl.pos + n):
+                stalled += 1
                 continue
             tokens[i, :n] = sl.prompt[sl.pos : sl.pos + n]
             lens[i] = n
-            budget -= n
+            pbudget -= n
             prefill_rows.append(i)
-        return tokens, pos, lens, decode_rows, prefill_rows
+        return tokens, pos, lens, decode_rows, prefill_rows, stalled
 
     def _tables(self):
         """Device copy of the block tables, re-uploaded only when the host
@@ -527,26 +692,65 @@ class Scheduler:
             if continuing:
                 sl.meter.decode_tokens += 1
 
+    def _end_tick(self, ran: bool) -> bool:
+        """Per-tick ladder/admission bookkeeping: relax toward healthy on
+        clean ticks (the ladder ignores the call if pressure was noted this
+        clock), close stall episodes, and (un)pause admissions at level 5."""
+        if not self._stall_this_tick:
+            self._in_stall = False
+        self.ladder.note_clean(self.clock)
+        self.admission.paused = self.ladder.level >= len(LADDER_LEVELS) - 1
+        self.ladder.tick()
+        return ran
+
     def tick(self) -> bool:
-        """Plan + run one mixed step. Returns False when nothing ran."""
+        """Plan + run one mixed step. Returns False when nothing ran.
+
+        Advances the logical ``clock`` unconditionally — deadlines, fault
+        plans, and the ladder key on it, so even idle ticks count as time."""
+        self.clock += 1
+        self._fault_fired = False
+        self._stall_this_tick = False
+        if self.faults is not None:
+            self._apply_tick_faults()
+        if self.admission.queue_pressure():
+            # a bounded queue at its limit is the signal that can push the
+            # ladder past preempt into shed/reject
+            self.ladder.note_pressure(self.clock, "queue_full")
+        if self.ladder.level >= 4:
+            # ladder level 4: shed queued work that cannot or should not run
+            # — expired requests and the whole batch class
+            self.admission.shed_expired(self.clock)
+            self.admission.shed_class("batch", self.clock)
         self._admit()
-        tokens, pos, lens, decode_rows, prefill_rows = self._plan()
+        tokens, pos, lens, decode_rows, prefill_rows, stalled = self._plan()
+        if stalled:
+            self._note_stall(stalled)
         # pool pressure: nothing schedulable while slots are active means
         # every row's page allocation failed — recompute-preempt until one
         # can proceed (bounded by max_batch-1 preemptions)
         while not (decode_rows or prefill_rows) and self._preempt_one():
-            tokens, pos, lens, decode_rows, prefill_rows = self._plan()
+            tokens, pos, lens, decode_rows, prefill_rows, stalled = self._plan()
+            if stalled:
+                self._note_stall(stalled)
         scheduled = decode_rows + prefill_rows
         if not scheduled:
             if any(s is not None for s in self.slots):
+                if self._fault_fired:
+                    # injected exhaustion on every schedulable row: idle the
+                    # tick — the fault is keyed to this clock and passes
+                    self.idle_fault_ticks += 1
+                    return self._end_tick(True)
+                self.engine_stalls += 1
                 raise RuntimeError(
                     "page pool cannot back a single active sequence "
                     f"({self.mgr.num_pages if self.mgr else 0} pages of "
                     f"{self.rc.block_size} tokens)"
                 )
-            return False
+            return self._end_tick(False)
         if self.spec is not None:
-            return self._spec_tick(tokens, pos, lens, decode_rows, prefill_rows)
+            return self._end_tick(
+                self._spec_tick(tokens, pos, lens, decode_rows, prefill_rows))
         tables = self._tables()
 
         # width-adaptive tick: decode-only ticks run the step at width 1
@@ -554,34 +758,155 @@ class Scheduler:
         # chunk width in padded query compute — a second jit cache entry,
         # still O(1) compiles for the engine's lifetime
         width = self.chunk if prefill_rows else 1
-        out = self._step(
-            self.params, self.caches,
-            jnp.asarray(tokens[:, :width]), jnp.asarray(pos), jnp.asarray(lens),
-            tables,
-        )
-        if self.track_energy:
-            self.caches, logits, tree = out
-            step_by_bits = tree_totals_by_bits(tree)
-        else:
-            self.caches, logits = out
+
+        # quarantined rows run through the fallback-policy step instead of
+        # the (suspect) target-policy step; everything else is unchanged
+        fbset = {i for i in scheduled if self.slots[i].fallback}
+        fb_np = None
+        if fbset:
+            fb_np = self._run_fallback(tokens, pos, lens, tables,
+                                       sorted(fbset), width)
+            if fb_np is None:
+                for i in sorted(fbset):
+                    self._shed_slot(i, RejectReason.NUMERICAL_FAULT,
+                                    "non-finite logits and no fallback step")
+                decode_rows = [i for i in decode_rows if i not in fbset]
+                prefill_rows = [i for i in prefill_rows if i not in fbset]
+                scheduled = decode_rows + prefill_rows
+                fbset = set()
+                if not scheduled:
+                    return self._end_tick(True)
+        main_rows = [i for i in scheduled if i not in fbset]
+        step_by_bits: dict = {}
+        # writable host copy: fault injection + row merging mutate it
+        logits_np = None if fb_np is None else fb_np.copy()
+        if main_rows:
+            lens_main = lens.copy()
+            for i in fbset:
+                lens_main[i] = 0
+            out = self._step(
+                self.params, self.caches,
+                jnp.asarray(tokens[:, :width]), jnp.asarray(pos),
+                jnp.asarray(lens_main), tables,
+            )
+            if self.track_energy:
+                self.caches, logits, tree = out
+                step_by_bits = tree_totals_by_bits(tree)
+            else:
+                self.caches, logits = out
+            main_np = np.array(logits, np.float32)   # writable copy
+            if logits_np is None:
+                logits_np = main_np
+            else:
+                for i in main_rows:
+                    logits_np[i] = main_np[i]
         self.ticks += 1
 
-        toks = np.asarray(sample(self._sample_keys(pos, lens), logits, self.temperature))
+        # induced numerical faults corrupt target-policy rows only (the
+        # fallback step models the numerically-safe path)
+        if self.faults is not None:
+            for ev in self.faults.at(self.clock, "nan_logits"):
+                r = ev.arg % self.max_batch
+                if r in main_rows:
+                    logits_np[r] = np.nan
+        bad = [i for i in scheduled if not np.isfinite(logits_np[i]).all()]
+        for i in bad:
+            if self.slots[i].fallback:
+                # the numerically-safe path itself is non-finite: terminal
+                self._shed_slot(i, RejectReason.NUMERICAL_FAULT,
+                                "non-finite logits at the fallback policy")
+            else:
+                self._quarantine(i)
+        badset = set(bad)
 
-        total = float(sum(int(lens[i]) for i in scheduled))
+        toks = np.asarray(sample(self._sample_keys(pos, lens),
+                                 jnp.asarray(logits_np), self.temperature))
+
+        total = float(sum(int(lens[i]) for i in main_rows)) or 1.0
         for i in scheduled:
             sl = self.slots[i]
-            if self.track_energy and sl.meter is not None:
+            if sl is None:
+                continue  # shed this tick (terminal numerical fault)
+            if (self.track_energy and sl.meter is not None
+                    and i not in fbset):
+                # quarantined rows stay charged: wasted compute is real
                 sl.meter.add_share(step_by_bits, int(lens[i]) / total)
+            if i in badset:
+                continue  # quarantined: same position retries next tick
             was_decoding = not sl.prefilling
             sl.pos += int(lens[i])
+            sl.retries = 0
             if was_decoding or not sl.prefilling:
                 # decode rows and just-completed prefills both sampled a token
                 self._emit(i, int(toks[i]))
                 if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                     self._finish(i)
         self._rr = (self._rr + 1) % self.max_batch
-        return True
+        return self._end_tick(True)
+
+    # ------------------------------------------------------ numerical guard
+    def _quarantine(self, i: int) -> None:
+        """Non-finite logits on row ``i``: roll the row back to its pre-tick
+        state (pages freed via truncate, position unchanged, nothing
+        emitted) and retry next tick. The first ``nan_retry_limit`` retries
+        re-run the same policy — a *transient* fault clears bit-exactly; a
+        persistent one escalates to the ``rc.fallback_policy`` step
+        (sticky). Ties robustness back to quantization risk: overflow at
+        int2/int4 is exactly the fault this guard exists for."""
+        sl = self.slots[i]
+        self.nan_events += 1
+        if self.mgr is not None:
+            self.mgr.truncate(i, sl.pos)
+        if self.spec is not None:
+            # speculative state past the committed prefix is suspect too
+            sl.draft_pos = min(sl.draft_pos, sl.pos)
+            sl.draft_gap = []
+            if not sl.draft_stale:
+                sl.draft_stale = True
+                self.draft_stale_events += 1
+        sl.retries += 1
+        if sl.retries > self.nan_retry_limit and not sl.fallback:
+            sl.fallback = True
+            self.fallback_retries += 1
+        log.warning(
+            "scheduler: non-finite logits on row %d (rid %d, clock %d) — %s",
+            i, sl.req.rid, self.clock,
+            "fallback policy engaged" if sl.fallback else "clean retry",
+        )
+
+    def _run_fallback(self, tokens, pos, lens, tables, fb_rows, width):
+        """One mixed step at ``rc.fallback_policy`` (default ``*=bf16``) for
+        the quarantined rows only (other rows masked to length 0). Returns
+        last-column logits (B, V), or None when the fallback path is
+        unusable (e.g. prequant-packed params cannot re-lower at another
+        policy) — callers then shed with a structured NUMERICAL_FAULT."""
+        if self._fb_unavailable:
+            return None
+        try:
+            if self._fb_step is None:
+                import dataclasses as _dc
+
+                rc_fb = _dc.replace(
+                    self.rc,
+                    quant_policy=self.rc.fallback_policy or "*=bf16",
+                    gemm_backend="bf16", gemm_mode="dynamic", quant_layers=(),
+                    spec_gamma=0, draft_policy=None,
+                )
+                # no donation: a failing first call must not invalidate caches
+                self._fb_step = jax.jit(build_mixed_step(self.cfg, rc_fb))
+            lens_fb = np.zeros_like(lens)
+            for i in fb_rows:
+                lens_fb[i] = lens[i]
+            self.caches, logits = self._fb_step(
+                self.params, self.caches,
+                jnp.asarray(tokens[:, :width]), jnp.asarray(pos),
+                jnp.asarray(lens_fb), tables,
+            )
+        except Exception as e:  # noqa: BLE001 — any lowering failure is terminal
+            log.error("scheduler: fallback policy step unavailable: %r", e)
+            self._fb_unavailable = True
+            return None
+        return np.asarray(logits, np.float32)
 
     # ------------------------------------------------------------ spec tick
     def _spec_tick(self, tokens, pos, lens, decode_rows, prefill_rows) -> bool:
@@ -598,16 +923,53 @@ class Scheduler:
         from .spec import DraftRow, greedy_accept, rejection_accept
 
         spec, rows = self.spec, self.max_batch
+        W = tokens.shape[1]
+
+        # ---- stale-draft resync (one slot/tick, healthy ladder only): re-
+        # ingest the committed suffix the draft pool is missing, one chunk
+        # window per tick, so a stale slot recovers drafting instead of
+        # falling back to plain decode forever. Under pressure the pass is
+        # skipped — a stale draft costs speedup, not correctness.
+        if self.ladder.level == 0:
+            for i, sl in enumerate(self.slots):
+                if (sl is None or sl.prefilling or sl.fallback
+                        or not sl.draft_stale):
+                    continue
+                behind = sl.pos - sl.draft_pos
+                if behind > 0:
+                    seq = list(sl.req.prompt) + list(sl.req.out)
+                    n = min(self.chunk, behind)
+                    rt = np.zeros((rows, self.chunk), np.int32)
+                    rp = np.zeros(rows, np.int32)
+                    rl = np.zeros(rows, np.int32)
+                    rt[i, :n] = seq[sl.draft_pos : sl.draft_pos + n]
+                    rp[i] = sl.draft_pos
+                    rl[i] = n
+                    by_bits = spec.mirror_prefill(
+                        jnp.asarray(rt), jnp.asarray(rp), jnp.asarray(rl),
+                        self._tables(),
+                    )
+                    if by_bits and sl.meter is not None:
+                        sl.meter.add_share(by_bits, 1.0, bucket="draft")
+                    sl.draft_pos += n
+                if sl.draft_pos >= sl.pos:
+                    sl.draft_stale = False
+                    sl.draft_gap = []
+                    self.draft_resyncs += 1
+                break
+
         # per-row candidate budget: never draft past max_new or capacity,
+        # cap γ at the ladder's current level (degrade-spec-γ is rung 1),
         # and degrade γ (not stall) when the page pool cannot back the
         # optimistic γ+1 verify writes
+        gcap = self.ladder.gamma_cap(spec.gamma)
         g: dict[int, int] = {}
         draft_rows: list[DraftRow] = []
         for i in decode_rows:
             sl = self.slots[i]
             remaining = sl.req.max_new - len(sl.req.out)
-            gi = max(0, min(spec.gamma, remaining - 1, self.capacity - 2 - sl.pos))
-            if sl.draft_stale:
+            gi = max(0, min(gcap, remaining - 1, self.capacity - 2 - sl.pos))
+            if sl.draft_stale or sl.fallback:
                 gi = 0
             while gi > 0 and self.mgr is not None and not self.mgr.extend(i, sl.pos + gi + 1):
                 gi -= 1
@@ -618,6 +980,24 @@ class Scheduler:
                     gap=list(sl.draft_gap), last_token=sl.last_token, g=gi,
                 ))
         tables = self._tables()
+
+        # quarantined rows run the fallback-policy step instead (masked out
+        # of draft + verify below); unavailable fallback sheds them
+        fbset = {i for i in decode_rows + prefill_rows if self.slots[i].fallback}
+        fb_np = None
+        if fbset:
+            fbw = W if any(i in fbset for i in prefill_rows) else 1
+            fb_np = self._run_fallback(tokens, pos, lens, tables,
+                                       sorted(fbset), fbw)
+            if fb_np is None:
+                for i in sorted(fbset):
+                    self._shed_slot(i, RejectReason.NUMERICAL_FAULT,
+                                    "non-finite logits and no fallback step")
+                decode_rows = [i for i in decode_rows if i not in fbset]
+                prefill_rows = [i for i in prefill_rows if i not in fbset]
+                fbset = set()
+                if not (decode_rows or prefill_rows):
+                    return True
 
         # ---- draft phase: γ sequential low-bit steps over the draft rows
         proposals: dict[int, list[int]] = {}
@@ -642,14 +1022,17 @@ class Scheduler:
                     sl.meter.drafted_tokens += r.g
 
         # ---- verify + prefill: one target step, every column's logits kept
-        W = tokens.shape[1]
         Wv = max(spec.gamma + 1, W if prefill_rows else 0)
         vt = np.zeros((rows, Wv), np.int32)
         vlens = np.zeros(rows, np.int32)
         for i in prefill_rows:
+            if i in fbset:
+                continue          # runs through the fallback step instead
             vt[i, : int(lens[i])] = tokens[i, : int(lens[i])]
             vlens[i] = lens[i]
         for i in decode_rows:
+            if i in fbset:
+                continue
             sl = self.slots[i]
             vt[i, 0] = sl.last_token
             for j, t in enumerate(proposals.get(i, [])):
@@ -666,35 +1049,63 @@ class Scheduler:
             self.caches, logits = out
         self.ticks += 1
         scheduled = decode_rows + prefill_rows
-        total = float(sum(int(vlens[i]) for i in scheduled))
+        total = float(sum(int(vlens[i]) for i in scheduled)) or 1.0
         if self.track_energy:
             for i in scheduled:
                 sl = self.slots[i]
-                if sl.meter is not None:
+                if sl.meter is not None and i not in fbset:
                     sl.meter.add_share(step_by_bits, int(vlens[i]) / total)
 
         # ---- mirror prefill chunks into the draft KV pool
-        if prefill_rows:
+        main_prefill = [i for i in prefill_rows if i not in fbset]
+        if main_prefill:
             mlens = lens.copy()
             for i in decode_rows:
                 mlens[i] = 0
+            for i in fbset:
+                mlens[i] = 0      # fallback rows' drafts are stale anyway
             m_by_bits = spec.mirror_prefill(
                 jnp.asarray(tokens[:, :W]), jnp.asarray(pos), jnp.asarray(mlens),
                 tables,
             )
-            m_total = float(sum(int(mlens[i]) for i in prefill_rows))
-            for i in prefill_rows:
+            m_total = float(sum(int(mlens[i]) for i in main_prefill)) or 1.0
+            for i in main_prefill:
                 sl = self.slots[i]
                 if m_by_bits and sl.meter is not None:
                     sl.meter.add_share(m_by_bits, int(mlens[i]) / m_total,
                                        bucket="draft")
                 sl.draft_pos = int(pos[i]) + int(lens[i])
 
+        # ---- numerical-fault guard (injection, then detection)
+        logits_np = np.array(logits, np.float32)             # (B, Wv, V) copy
+        if self.faults is not None:
+            for ev in self.faults.at(self.clock, "nan_logits"):
+                r = ev.arg % rows
+                if r in scheduled and r not in fbset:
+                    logits_np[r] = np.nan
+        bad = []
+        for i in scheduled:
+            cols = fb_np[i] if i in fbset else logits_np[i, : max(int(vlens[i]), 1)]
+            if not np.isfinite(cols).all():
+                bad.append(i)
+        for i in bad:
+            if i in fbset:
+                # the numerically-safe path itself is non-finite: terminal
+                self._shed_slot(i, RejectReason.NUMERICAL_FAULT,
+                                "non-finite logits at the fallback policy")
+            else:
+                self._quarantine(i)
+        badset = set(bad)
+        decode_rows = [i for i in decode_rows if i not in badset]
+        prefill_rows = [i for i in prefill_rows if i not in badset]
+        fbset -= badset
+
         # ---- acceptance + emission
-        logits_np = np.asarray(logits, np.float32)           # (B, Wv, V)
         if self.temperature <= 0.0:
             argmax = np.argmax(logits_np, axis=-1)           # (B, Wv)
         for i in decode_rows:
+            if i in fbset:
+                continue          # emitted from the fallback logits below
             sl = self.slots[i]
             if self.temperature <= 0.0:
                 n_acc, emitted = greedy_accept(proposals.get(i, []), argmax[i])
@@ -713,6 +1124,7 @@ class Scheduler:
             if self.mgr is not None:
                 self.mgr.truncate(i, new_len)
             sl.pos = new_len
+            sl.retries = 0
             if g[i] == 0:
                 # plain-decode fallback tick: the draft never saw the old
                 # last token — queue it for the next catch-up step
@@ -736,11 +1148,15 @@ class Scheduler:
                 self._finish(i)
         # prefill rows: plain chunk bookkeeping + completion sampling from
         # the verify step's per-position logits (column lens-1)
-        if prefill_rows:
+        if prefill_rows or fbset:
             keys = self._sample_keys(pos, lens)
+        if prefill_rows:
             for i in prefill_rows:
+                if i in fbset:
+                    continue      # emitted from the fallback logits below
                 sl = self.slots[i]
                 sl.pos += int(lens[i])
+                sl.retries = 0
                 if not sl.prefilling:
                     row_logits = logits_np[i, int(lens[i]) - 1]
                     if self.temperature <= 0.0:
@@ -751,17 +1167,86 @@ class Scheduler:
                     self._emit(i, t)
                     if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                         self._finish(i)
+        # quarantined rows: plain (γ=0) commit from the fallback step's
+        # last-column logits — decode rows advance one token, prefill rows
+        # advance their chunk
+        for i in sorted(fbset):
+            sl = self.slots[i]
+            was_decoding = not sl.prefilling
+            sl.pos += int(lens[i])
+            sl.retries = 0
+            if was_decoding or not sl.prefilling:
+                if self.temperature <= 0.0:
+                    t = int(np.argmax(fb_np[i]))
+                else:
+                    t = int(sample(keys[i], jnp.asarray(fb_np[i]),
+                                   self.temperature))
+                self._emit(i, t)
+                if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
+                    self._finish(i)
         self._rr = (self._rr + 1) % self.max_batch
         return True
 
     def run(self, max_ticks: int = 100_000) -> list[Request]:
-        """Drain the queue + all active slots; returns finished requests."""
+        """Drain the queue + all active slots; returns finished requests.
+
+        Under :meth:`begin_drain` only active (and previously-admitted,
+        preempted) work runs; everything still queued afterwards is rejected
+        with SHUTTING_DOWN — no request ends without a terminal state."""
         ticks = 0
-        while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
-            if not self.tick() and not self.queue:
+        while ticks < max_ticks:
+            pending = self.admission.pending(admitted_only=self.draining)
+            if not pending and not any(s is not None for s in self.slots):
+                break
+            if not self.tick() and not pending:
                 break
             ticks += 1
+        if self.draining:
+            n = self.admission.flush_pending(RejectReason.SHUTTING_DOWN,
+                                             self.clock)
+            if n:
+                log.info("scheduler: drain flushed %d queued request(s)", n)
         return self.finished
+
+    # -------------------------------------------------------------- health
+    def health(self) -> dict:
+        """Robustness snapshot (DESIGN.md §10): ladder state + transitions,
+        per-class queue depths, pool occupancy, and every shed / preempt /
+        stall / fault counter. Pure host bookkeeping — cheap enough to call
+        every tick."""
+        mgr = self.mgr
+        return {
+            "clock": self.clock,
+            "ticks": self.ticks,
+            "draining": self.draining,
+            "ladder": self.ladder.snapshot(),
+            "active_slots": sum(1 for s in self.slots if s is not None),
+            "max_batch": self.max_batch,
+            "queue_depths": self.admission.depths(),
+            "queued": self.admission.pending(),
+            "submitted": self.admission.submitted,
+            "admitted": self.admission.admitted,
+            "completed": len(self.finished),
+            "rejections": self.admission.rejections_by_reason(),
+            "sheds": self.admission.sheds,
+            "preemptions": self.preemptions,
+            "deadline_misses": self.deadline_misses,
+            "pool": ({
+                "pages": mgr.num_pages,
+                "in_use": mgr.pages_in_use,
+                "high_water": mgr.high_water,
+                "occupancy": mgr.pages_in_use / max(mgr.num_pages, 1),
+                "injected_alloc_failures": mgr.injected_failures,
+            } if mgr is not None else {"layout": "dense"}),
+            "stalled_rows_total": self.stalled_rows_total,
+            "stall_episodes": self.stall_episodes,
+            "engine_stalls": self.engine_stalls,
+            "idle_fault_ticks": self.idle_fault_ticks,
+            "nan_events": self.nan_events,
+            "fallback_retries": self.fallback_retries,
+            "draft_stale_events": self.draft_stale_events,
+            "draft_resyncs": self.draft_resyncs,
+        }
 
     # -------------------------------------------------------------- energy
     def energy_summary(self, variant: str = "serial") -> list[dict]:
@@ -815,3 +1300,33 @@ class Scheduler:
             "cache_bytes_reserved": total,
             "cache_bytes_high_water": total,
         }
+
+
+def install_sigint_drain(sched: Scheduler):
+    """Graceful shutdown (satellite b): the first SIGINT begins a drain —
+    active slots finish, queued work is rejected with structured
+    SHUTTING_DOWN, SlotMeter energy summaries survive for the final flush;
+    a second SIGINT restores the previous handler and raises
+    KeyboardInterrupt (hard abort). Returns a zero-arg callable that
+    restores the previous handler."""
+    import signal
+
+    prev = signal.getsignal(signal.SIGINT)
+
+    def _handler(signum, frame):
+        if sched.draining:
+            signal.signal(signal.SIGINT, prev)
+            raise KeyboardInterrupt
+        log.warning(
+            "SIGINT: draining %d active slot(s), %d queued — ^C again to abort",
+            sum(1 for s in sched.slots if s is not None),
+            sched.admission.pending(),
+        )
+        sched.begin_drain()
+
+    signal.signal(signal.SIGINT, _handler)
+
+    def restore():
+        signal.signal(signal.SIGINT, prev)
+
+    return restore

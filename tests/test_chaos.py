@@ -1,0 +1,426 @@
+"""Chaos suite: deterministic fault injection against the serving engine
+(DESIGN.md §10).
+
+The contract under test: **faults change scheduling, never results.**
+Induced page-allocation failures, preemption storms, draft staleness, and
+*transient* NaN logits may change tick counts, ladder levels, γ, and
+preemption totals — but greedy token sequences stay bit-exact vs the
+fault-free run, the BlockManager's free ⊎ allocated partition always holds,
+and every submitted request reaches a terminal state (completed, or
+rejected with a structured reason). The one documented carve-out: a
+*persistent* numerical fault escalates the row to the fallback policy,
+where results legitimately change (tested separately).
+
+``test_chaos_smoke_*`` tests are the fixed-seed fast subset scripts/ci.sh
+runs; the hypothesis ``random_schedules`` tests are the broader sweep.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import RunConfig, get_config
+from repro.models import init
+from repro.serve import Request, Scheduler
+from repro.serve.admission import (
+    LADDER_LEVELS,
+    AdmissionController,
+    DegradationLadder,
+    RejectReason,
+)
+from repro.serve.cache import BlockManager
+from repro.serve.faults import FaultEvent, FaultPlan
+
+ARCH = "qwen3-0.6b_smoke"
+RC = RunConfig(
+    dtype="float32", param_dtype="float32", remat="none",
+    kv_layout="paged", block_size=4, prefill_chunk=5,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init(cfg, RC, jax.random.PRNGKey(0))
+
+
+def _reqs(cfg, n=5, max_new=5, seed=1, **kw):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n):
+        r = Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, 4 + 3 * (rid % 3)).tolist(), max_new=max_new)
+        for k, v in kw.items():
+            setattr(r, k, v)
+        out.append(r)
+    return out
+
+
+def _run(cfg, rc, params, reqs, **kw):
+    s = Scheduler(cfg, rc, params, capacity=32, max_batch=3, **kw)
+    for r in reqs:
+        s.submit(r)
+    s.run(max_ticks=2000)
+    return s
+
+
+def _assert_clean(s, reqs):
+    """The three run-wide invariants every chaos run must satisfy."""
+    if s.mgr is not None:
+        s.mgr.check_invariants()
+        assert s.mgr.pages_in_use == 0, "pages leaked past drain"
+    assert s.engine_stalls == 0
+    for r in reqs:
+        assert r.done or r.rejected is not None, (
+            f"request {r.rid} ended without a terminal state"
+        )
+
+
+# ===================================================== admission (host-only)
+def test_admission_priority_order_and_fifo():
+    adm = AdmissionController()
+    rs = _reqs(get_config(ARCH), n=6)
+    for i, (r, pri) in enumerate(zip(rs, ["batch", "interactive", "realtime",
+                                          "batch", "realtime", "interactive"])):
+        r.priority = pri
+        assert adm.submit(r, now=0) is None
+    order = []
+    while (r := adm.pop(now=1)) is not None:
+        order.append(r.rid)
+    # realtime (FIFO) then interactive then batch
+    assert order == [2, 4, 1, 5, 0, 3]
+    assert adm.admitted == 6
+
+
+def test_admission_queue_bound_and_tenant_budget(cfg):
+    adm = AdmissionController(max_queue=2, tenant_budgets={"acme": 20})
+    rs = _reqs(cfg, n=3, max_new=2, tenant="zeta")
+    assert adm.submit(rs[0], 0) is None and adm.submit(rs[1], 0) is None
+    rej = adm.submit(rs[2], 0)
+    assert rej is not None and rej.reason == RejectReason.QUEUE_FULL
+    assert rs[2].rejected is rej
+
+    adm2 = AdmissionController(tenant_budgets={"acme": 11})
+    a, b = _reqs(cfg, n=2, max_new=2, tenant="acme")  # prompts 4 and 7 tokens
+    assert adm2.submit(a, 0) is None                  # cost 6 <= 11
+    rej = adm2.submit(b, 0)                           # cost 9: 6+9 > 11
+    assert rej is not None and rej.reason == RejectReason.OVER_BUDGET
+    # shed-before-run refunds the charge in full
+    adm2.shed_class("interactive", now=1)
+    assert adm2.tenant_spent["acme"] == 0
+    assert adm2.submit(b, 2) is None                  # 9 <= 11 now fits
+
+
+def test_admission_ttl_sheds_expired_before_run(cfg):
+    adm = AdmissionController(default_ttl=5)
+    a, b = _reqs(cfg, n=2)
+    adm.submit(a, now=0)
+    adm.submit(b, now=4)
+    assert a.deadline == 5 and b.deadline == 9
+    got = adm.pop(now=7)        # a expired at 5 — shed, never runs
+    assert got is b
+    assert a.rejected is not None
+    assert a.rejected.reason == RejectReason.DEADLINE_EXPIRED
+    assert adm.sheds == 1
+    assert adm.submit(_reqs(cfg, n=1)[0], now=0) is None  # fresh ones fine
+
+    # ttl <= 0 is rejected at submit, before it ever queues
+    c = _reqs(cfg, n=1)[0]
+    c.ttl_ticks = 0
+    rej = adm.submit(c, now=3)
+    assert rej is not None and rej.reason == RejectReason.DEADLINE_EXPIRED
+
+
+def test_admission_drain_readmits_only_preempted(cfg):
+    adm = AdmissionController()
+    a, b = _reqs(cfg, n=2)
+    adm.submit(a, 0)
+    adm.submit(b, 0)
+    got = adm.pop(1)
+    assert got is a and a.admitted
+    adm.requeue_front(a)        # preemption path
+    adm.draining = True
+    assert adm.pop(2, readmit_only=True) is a
+    assert adm.pop(3, readmit_only=True) is None   # b never ran: stays queued
+    assert adm.flush_pending(RejectReason.SHUTTING_DOWN, 4) == 1
+    assert b.rejected.reason == RejectReason.SHUTTING_DOWN
+
+
+# ======================================================== ladder (host-only)
+def test_ladder_escalates_one_level_per_tick_and_relaxes():
+    lad = DegradationLadder(relax_after=2)
+    assert lad.level == 0
+    lad.note_pressure(1, "x")
+    lad.note_pressure(1, "x")          # same tick: still one level
+    assert lad.level == 1
+    lad.note_pressure(2, "x")
+    assert lad.level == 2
+    lad.note_clean(2)                  # pressure already noted at clock 2
+    assert lad.level == 2
+    lad.note_clean(3)
+    lad.note_clean(4)                  # relax_after=2 clean ticks -> down one
+    assert lad.level == 1
+    lad.note_clean(5)
+    lad.note_clean(6)
+    assert lad.level == 0
+    names = [(t["from"], t["to"]) for t in lad.transitions]
+    assert names == [("healthy", "degrade_gamma"),
+                     ("degrade_gamma", "shrink_chunk"),
+                     ("shrink_chunk", "degrade_gamma"),
+                     ("degrade_gamma", "healthy")]
+
+
+def test_ladder_floor_and_ceiling():
+    lad = DegradationLadder()
+    lad.note_pressure(1, "alloc", ceil=3)
+    lad.note_pressure(2, "alloc", ceil=3)
+    lad.note_pressure(3, "alloc", ceil=3)
+    lad.note_pressure(4, "alloc", ceil=3)
+    assert lad.level == 3              # pool pressure caps at preempt
+    lad.note_pressure(5, "queue_full")
+    lad.note_pressure(6, "queue_full")
+    assert lad.level == 5              # queue pressure reaches reject
+    lad2 = DegradationLadder()
+    lad2.escalate_to(1, 3, "preemption")   # floor: never understate remedies
+    assert lad2.level == 3
+
+
+def test_ladder_effects_and_occupancy():
+    lad = DegradationLadder()
+    assert lad.gamma_cap(4) == 4
+    assert lad.prefill_budget(40, 5) == 40
+    for t in range(1, 5):
+        lad.note_pressure(t, "q")
+        lad.tick()
+    assert lad.level == 4
+    assert lad.gamma_cap(4) == 0           # shed: no speculation at all
+    assert lad.prefill_budget(40, 5) == 5  # one-chunk floor
+    lad2 = DegradationLadder()
+    lad2.note_pressure(1, "q")
+    assert lad2.gamma_cap(4) == 2          # halved per level
+    lad2.note_pressure(2, "q")
+    assert lad2.prefill_budget(40, 5) == 20
+    occ = lad.snapshot()["occupancy"]
+    assert sum(occ.values()) == 4 and occ["preempt"] == 1
+    assert list(occ) == list(LADDER_LEVELS)
+
+
+# ========================================================= fault plans
+def test_fault_plan_deterministic_and_spaced():
+    a = FaultPlan.generate(7, horizon=200, max_batch=4)
+    b = FaultPlan.generate(7, horizon=200, max_batch=4)
+    assert a.events == b.events and len(a) > 0
+    c = FaultPlan.generate(8, horizon=200, max_batch=4)
+    assert a.events != c.events
+    last = {}
+    for e in a.events:
+        if e.kind == "nan_logits":
+            assert e.tick - last.get(e.arg, -(1 << 30)) >= 6
+            last[e.arg] = e.tick
+    assert set(a.describe()["by_kind"]) <= set(
+        ("alloc_fail", "preempt_storm", "draft_stale", "nan_logits"))
+    with pytest.raises(ValueError):
+        FaultEvent(1, "bogus")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    pages=st.integers(2, 12),
+    ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 2),
+                           st.integers(1, 16)), max_size=40),
+)
+def test_block_manager_invariants_under_random_schedules(seed, pages, ops):
+    """Allocator partition holds under any interleaving of extend/truncate/
+    release with an injected-failure hook firing on an arbitrary schedule;
+    a hooked-out extend must not mutate anything."""
+    rng = np.random.default_rng(seed)
+    mgr = BlockManager(num_pages=pages, block_size=4, max_batch=3, capacity=16)
+    mgr.fault_hook = lambda slot, new_len: bool(rng.random() < 0.3)
+    for op, slot, n in ops:
+        if op == 0:
+            before = (mgr.lens.copy(), mgr.blocks_used.copy(), list(mgr.free))
+            ok = mgr.extend(slot, max(n, int(mgr.lens[slot])))
+            if not ok:
+                after = (mgr.lens.copy(), mgr.blocks_used.copy(), list(mgr.free))
+                assert all(np.array_equal(x, y) if isinstance(x, np.ndarray)
+                           else x == y for x, y in zip(before, after))
+        elif op == 1:
+            mgr.truncate(slot, int(mgr.lens[slot]) // 2)
+        else:
+            mgr.release(slot)
+        mgr.check_invariants()
+    for s in range(3):
+        mgr.release(s)
+    assert mgr.pages_in_use == 0
+
+
+# ============================================== engine chaos (fixed seeds)
+@pytest.fixture(scope="module")
+def baseline(cfg, params):
+    """Fault-free greedy run: the reference the chaos runs must match."""
+    reqs = _reqs(cfg, n=5)
+    s = _run(cfg, RC, params, reqs)
+    return {r.rid: list(r.out) for r in reqs}, s.ticks
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_smoke_faults_never_change_results(cfg, params, baseline, seed):
+    """Generated fault schedule (alloc failures, preemption storms,
+    transient NaNs) against the plain scheduler: greedy tokens bit-exact vs
+    the fault-free run, allocator partition intact, everything terminates."""
+    ref, ref_ticks = baseline
+    plan = FaultPlan.generate(seed, horizon=8 * ref_ticks + 50, max_batch=3)
+    reqs = _reqs(cfg, n=5)
+    s = _run(cfg, RC, params, reqs, faults=plan)
+    _assert_clean(s, reqs)
+    assert {r.rid: list(r.out) for r in reqs} == ref
+    h = s.health()
+    assert h["clock"] >= h["ticks"]
+    # the run actually exercised the fault paths
+    assert (s.mgr.injected_failures + h["preemptions"] + h["nan_events"]) > 0
+
+
+def test_chaos_smoke_spec_faults_never_change_results(cfg, params):
+    """Spec-decoding variant: draft staleness + storms + alloc failures may
+    cost ticks and resyncs but never change greedy output vs the fault-free
+    spec run."""
+    rc = dataclasses.replace(RC, spec_gamma=2, draft_policy="*=int2")
+    reqs0 = _reqs(cfg, n=4)
+    s0 = _run(cfg, rc, params, reqs0, draft_params=params)
+    ref = {r.rid: list(r.out) for r in reqs0}
+
+    plan = FaultPlan.generate(
+        3, horizon=8 * s0.ticks + 50, max_batch=3,
+        rates={"draft_stale": 0.25, "alloc_fail": 0.0, "preempt_storm": 0.02,
+               "nan_logits": 0.0},
+    )
+    reqs = _reqs(cfg, n=4)
+    s = _run(cfg, rc, params, reqs, draft_params=params, faults=plan)
+    _assert_clean(s, reqs)
+    assert {r.rid: list(r.out) for r in reqs} == ref
+    assert s.draft_stale_events > 0
+    assert s.draft_resyncs > 0        # stale slots recovered, not stuck
+
+
+def test_chaos_smoke_nan_transient_retry_is_bitexact(cfg, params, baseline):
+    """A one-off NaN on a scheduled row rolls the row back and retries the
+    same policy next tick — bit-exact, one nan_event, no fallback."""
+    ref, _ = baseline
+    plan = FaultPlan([FaultEvent(3, "nan_logits", 0),
+                      FaultEvent(12, "nan_logits", 2)])
+    reqs = _reqs(cfg, n=5)
+    s = _run(cfg, RC, params, reqs, faults=plan)
+    _assert_clean(s, reqs)
+    assert {r.rid: list(r.out) for r in reqs} == ref
+    assert s.nan_events >= 1
+    assert s.fallback_retries == 0
+
+
+def test_nan_persistent_escalates_to_fallback(cfg, params):
+    """NaN every tick on one row exhausts the clean-retry budget and pins
+    the row to the fallback policy (sticky). The request still completes —
+    the documented carve-out where results may legitimately change — and
+    injection no longer reaches the quarantined row."""
+    plan = FaultPlan([FaultEvent(t, "nan_logits", 0) for t in range(1, 40)])
+    reqs = _reqs(cfg, n=2)
+    s = _run(cfg, RC, params, reqs, faults=plan)
+    _assert_clean(s, reqs)
+    assert s.fallback_retries >= 1
+    assert s.nan_events >= 2          # at least one clean retry was attempted
+    assert all(r.done and len(r.out) == 5 for r in reqs)
+
+
+def test_chaos_smoke_overload_rejects_and_recovers(cfg, params):
+    """Bounded queues under a burst: queue_full rejections at submit, the
+    ladder escalates past preempt on queue pressure, and the engine never
+    stalls; every request is completed or structurally rejected."""
+    adm = AdmissionController(max_queue=2, default_ttl={"batch": 6})
+    reqs = _reqs(cfg, n=9, max_new=4)
+    for i, r in enumerate(reqs):
+        r.priority = ["realtime", "interactive", "batch"][i % 3]
+    s = Scheduler(cfg, RC, params, capacity=32, max_batch=2, admission=adm)
+    rejected_at_submit = sum(s.submit(r) is not None for r in reqs)
+    s.run(max_ticks=2000)
+    _assert_clean(s, reqs)
+    h = s.health()
+    kinds = set(h["rejections"])
+    assert rejected_at_submit > 0 and RejectReason.QUEUE_FULL in kinds
+    assert h["completed"] > 0
+    trans = h["ladder"]["transitions"]
+    assert any(t["reason"] == "queue_full" for t in trans)   # escalated...
+    assert any("clean" in t["reason"] for t in trans)        # ...and relaxed
+
+
+def test_chaos_smoke_graceful_drain(cfg, params):
+    """begin_drain mid-run: active slots finish, queued work is rejected
+    SHUTTING_DOWN, nothing is silently dropped, and the energy meters of
+    completed work survive for the final flush."""
+    reqs = _reqs(cfg, n=6, max_new=4)
+    s = Scheduler(cfg, RC, params, capacity=32, max_batch=2,
+                  track_energy=True)
+    for r in reqs:
+        s.submit(r)
+    for _ in range(3):
+        s.tick()
+    s.begin_drain()
+    assert s.submit(_reqs(cfg, n=1, seed=9)[0]).reason == \
+        RejectReason.SHUTTING_DOWN
+    s.run(max_ticks=2000)
+    _assert_clean(s, reqs)
+    assert s.health()["draining"]
+    done = [r for r in reqs if r.done]
+    shut = [r for r in reqs if r.rejected is not None]
+    assert done and shut
+    assert all(r.rejected.reason == RejectReason.SHUTTING_DOWN for r in shut)
+    # completed requests' meters survived the drain
+    rids = {m["rid"] for m in s.energy_summary()}
+    assert {r.rid for r in done} <= rids
+
+
+def test_stall_accounting_under_pool_pressure(cfg, params):
+    """Satellite (a): pool-exhaustion row stalls are counted and surfaced
+    in health() — never silent — and logged once per episode."""
+    rc = dataclasses.replace(RC, spec_gamma=0)
+    reqs = _reqs(cfg, n=5, max_new=8)
+    s = Scheduler(cfg, rc, params, capacity=32, max_batch=3, num_pages=7)
+    for r in reqs:
+        s.submit(r)
+    s.run(max_ticks=2000)
+    _assert_clean(s, reqs)
+    h = s.health()
+    assert h["stalled_rows_total"] > 0
+    assert 0 < h["stall_episodes"] <= h["stalled_rows_total"]
+    assert h["ladder"]["transitions"], "pressure must move the ladder"
+
+
+# ======================================== engine chaos (hypothesis sweep)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1 << 16))
+def test_chaos_random_schedules_engine(seed):
+    """Broader randomized sweep of the same invariants (excluded from the
+    ci smoke subset; bounded examples keep it tractable)."""
+    cfg = get_config(ARCH)
+    params = _SWEEP.setdefault("params", init(cfg, RC, jax.random.PRNGKey(0)))
+    if "ref" not in _SWEEP:
+        reqs0 = _reqs(cfg, n=4)
+        s0 = _run(cfg, RC, params, reqs0)
+        _SWEEP["ref"] = {r.rid: list(r.out) for r in reqs0}
+        _SWEEP["ticks"] = s0.ticks
+    plan = FaultPlan.generate(seed, horizon=8 * _SWEEP["ticks"] + 50,
+                              max_batch=3)
+    reqs = _reqs(cfg, n=4)
+    s = _run(cfg, RC, params, reqs, faults=plan)
+    _assert_clean(s, reqs)
+    assert {r.rid: list(r.out) for r in reqs} == _SWEEP["ref"]
+
+
+_SWEEP: dict = {}

@@ -271,6 +271,35 @@ def test_spec_preemption_under_pool_pressure():
     assert s.mgr.pages_in_use == 0
 
 
+def test_spec_draft_stale_falls_back_and_resyncs():
+    """Induced draft-pool staleness (serve/faults.py) degrades, never breaks:
+    a stale row drafts nothing that tick (plain decode for the row), the
+    scheduler re-ingests the missing KV span next healthy tick, and greedy
+    output stays bit-exact vs the fault-free spec run with zero page leaks."""
+    from repro.serve.faults import FaultEvent, FaultPlan
+
+    cfg = get_config("qwen3-0.6b_smoke")
+    rc = dataclasses.replace(RC, kv_layout="paged", block_size=4,
+                             spec_gamma=2, draft_policy="*=int2")
+    params = init(cfg, rc, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, n=3)
+    s0, ref = _run(cfg, rc, params, prompts=prompts, max_new=8)
+
+    plan = FaultPlan([FaultEvent(t, "draft_stale", slot)
+                      for t in range(2, 2 + 2 * s0.ticks, 2)
+                      for slot in range(3)])
+    s, out = _run(cfg, rc, params, prompts=prompts, max_new=8, faults=plan)
+    assert out == ref                      # staleness may cost ticks, not tokens
+    assert s.ticks >= s0.ticks
+    assert s.draft_stale_events > 0
+    assert s.draft_resyncs > 0             # stale pools recovered, not abandoned
+    assert s.drafted_tokens > 0            # drafting resumed after resync
+    # clean fallback implies no KV damage on either pool: nothing leaks
+    s.mgr.check_invariants()
+    assert s.mgr.pages_in_use == 0
+    assert s.health()["nan_events"] == 0
+
+
 def test_legacy_engine_rejects_spec():
     cfg = get_config("qwen3-0.6b_smoke")
     rc = dataclasses.replace(RC, spec_gamma=2)
