@@ -39,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--engine", default="scheduler", choices=["scheduler", "legacy"])
     ap.add_argument("--kv-layout", default="paged", choices=["dense", "paged"])
     ap.add_argument("--block-size", type=int, default=8, help="tokens per KV page")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share block-aligned prompt prefixes via ref-counted "
+                         "copy-on-write pages (paged scheduler only)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--kv", default="bfloat16", choices=["bfloat16", "int8"])
     ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"])
@@ -56,6 +59,8 @@ def main(argv=None):
                    kv_cache_dtype=args.kv,
                    kv_layout=args.kv_layout if args.engine == "scheduler" else "dense",
                    block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+                   prefix_cache=(args.prefix_cache and args.kv_layout == "paged"
+                                 and args.engine == "scheduler"),
                    quant_policy=f"*={args.gemm_backend}",
                    spec_gamma=args.spec_gamma if spec_on else 0,
                    draft_policy=args.draft_policy if spec_on else None)
@@ -94,6 +99,10 @@ def main(argv=None):
         stats = eng.cache_stats()
         print(f"[serve_lm] cache: {stats['cache_bytes_high_water']}B live high-water "
               f"of {stats['cache_bytes_reserved']}B reserved")
+        if rc.prefix_cache:
+            print(f"[serve_lm] prefix: {eng.prefix_hits} hits, "
+                  f"{eng.prefix_tokens_reused} prompt tokens reused, "
+                  f"{eng.prefill_tokens_computed} prefilled")
         if spec_on:
             s = eng.spec_summary()
             print(f"[serve_lm] spec: gamma={s['spec_gamma']} "

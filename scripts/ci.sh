@@ -37,6 +37,14 @@ echo "== serve smoke (paged KV + chunked-prefill scheduler)"
 python -m pytest -x -q -p no:randomly tests/test_paged.py
 python benchmarks/serve_bench.py --fast
 
+echo "== prefix-cache smoke (COW shared pages: on/off bit-exactness A/B)"
+# the serve bench fast run above already hard-fails its shared-prompt A/B
+# (token identity, >=2x prefill-token reduction, lower live-page high
+# water); this stage re-runs the targeted conformance subset so a prefix
+# regression names the failing invariant instead of a bench exit code
+python -m pytest -x -q -p no:randomly tests/test_paged.py \
+    -k "prefix_cache or cow or cached_prefix or refcount"
+
 echo "== chaos smoke (fault injection: fixed-seed fast subset)"
 # the deterministic robustness gate (DESIGN.md §10): admission/ladder unit
 # tests plus the fixed-seed chaos runs — greedy bit-exactness under induced

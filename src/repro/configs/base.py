@@ -153,6 +153,12 @@ class RunConfig:
     # indexed through per-slot block tables (serve/cache.py manager).
     kv_layout: str = "dense"         # dense | paged
     block_size: int = 16             # tokens per KV page (paged layout)
+    # prefix caching (serve/cache.py, DESIGN.md §11): requests whose prompts
+    # share a block-aligned token prefix fork the same ref-counted pages
+    # (copy-on-write on divergence) and skip the matched prefill entirely.
+    # Requires kv_layout="paged". Off by default: page sharing changes pool
+    # occupancy and scheduling, so A/B baselines opt in explicitly.
+    prefix_cache: bool = False
     # chunked-prefill scheduler (serve/scheduler.py): prompts are split into
     # prefill_chunk-token chunks and packed with decode rows into one jitted
     # mixed step of static width max(prefill_chunk, 1) per tick.

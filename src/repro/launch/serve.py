@@ -48,6 +48,10 @@ def main(argv=None):
                     help="per-tick scheduled-token cap (0 = rows*chunk)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="paged pool size (0 = dense-equivalent)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share block-aligned prompt prefixes across requests "
+                         "via ref-counted copy-on-write pages (paged layout "
+                         "only; DESIGN.md §11)")
     ap.add_argument("--kv-dtype", default="bfloat16", choices=["bfloat16", "int8"])
     ap.add_argument("--gemm-backend", default="bf16", choices=["bf16", "int8", "int4", "int2"],
                     help="uniform precision (shorthand for --policy '*=<kind>')")
@@ -90,6 +94,7 @@ def main(argv=None):
         dtype=dtype, param_dtype=dtype, remat="none",
         kv_cache_dtype=args.kv_dtype,
         kv_layout=args.kv_layout, block_size=args.block_size,
+        prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
         quant_policy=load_policy(args.policy) or f"*={args.gemm_backend}",
         spec_gamma=args.spec_gamma,
@@ -107,7 +112,10 @@ def main(argv=None):
     if not use_scheduler and rc.kv_layout != "dense":
         # the legacy engine only speaks the dense slot layout
         print("[serve] legacy engine: forcing --kv-layout dense")
-        rc = dataclasses.replace(rc, kv_layout="dense")
+        rc = dataclasses.replace(rc, kv_layout="dense", prefix_cache=False)
+    elif rc.prefix_cache and rc.kv_layout != "paged":
+        print("[serve] --prefix-cache needs --kv-layout paged: disabling")
+        rc = dataclasses.replace(rc, prefix_cache=False)
     if not use_scheduler and rc.spec_gamma:
         print("[serve] legacy engine cannot speculate: disabling --spec-gamma")
         rc = dataclasses.replace(rc, spec_gamma=0, draft_policy=None)
@@ -182,6 +190,13 @@ def main(argv=None):
               f"stall_episodes={h['stall_episodes']} "
               f"engine_stalls={h['engine_stalls']}"
               + (" [drained]" if h["draining"] else ""))
+        if rc.prefix_cache:
+            p = h["prefix_cache"]
+            print(f"  prefix: hits={p['hits']} "
+                  f"tokens_reused={p['tokens_reused']} "
+                  f"prefill_computed={p['prefill_tokens_computed']} "
+                  f"cached_pages={p['cached_pages']} "
+                  f"evictions={p['evictions']} cow={p['cow_events']}")
         if rc.spec_gamma:
             s = eng.spec_summary()
             print(f"  spec: gamma={s['spec_gamma']} draft={s['draft_policy']} "

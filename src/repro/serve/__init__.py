@@ -1,7 +1,8 @@
 """Serving substrate.
 
 - serve.cache: paged KV pool block manager (free-list pages, block tables,
-  speculative fork/rollback via truncate)
+  speculative fork/rollback via truncate; ref-counted copy-on-write prefix
+  sharing + radix-trie prefix index under rc.prefix_cache)
 - serve.scheduler: chunked-prefill + decode mixed-step Scheduler (the
   block-managed, continuously-batched engine; speculative ticks when
   rc.spec_gamma > 0)
@@ -19,7 +20,7 @@ from .admission import (
     Rejection,
     RejectReason,
 )
-from .cache import BlockManager, num_pages_for
+from .cache import BlockManager, PrefixCache, PrefixNode, num_pages_for
 from .engine import Engine, build_decode, build_prefill
 from .faults import FaultEvent, FaultPlan
 from .scheduler import (
@@ -41,6 +42,8 @@ __all__ = [
     "Engine",
     "FaultEvent",
     "FaultPlan",
+    "PrefixCache",
+    "PrefixNode",
     "Rejection",
     "RejectReason",
     "Request",

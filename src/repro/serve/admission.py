@@ -87,9 +87,15 @@ class AdmissionController:
     ``max_queue`` bounds each class queue (int = same bound for all classes,
     dict = per-class, None = unbounded, preserving pre-admission behavior).
     ``tenant_budgets`` maps tenant -> lifetime token budget; a request is
-    charged ``len(prompt) + max_new`` at admission and refunded in full if it
-    is shed before ever running. ``default_ttl`` supplies a per-class TTL (in
-    ticks) for requests that do not set ``ttl_ticks`` themselves.
+    charged ``len(prompt) + max_new`` at admission and *settled* exactly once
+    when it reaches a terminal state: the unconsumed remainder
+    ``charged - consumed`` is refunded, where consumed counts prompt tokens
+    actually prefilled plus tokens actually generated. A request shed
+    straight out of the queue consumed nothing and gets the full charge
+    back; one that stops early at EOS gets its unused ``max_new`` back; a
+    preemption requeue that later expires keeps only what it truly burned.
+    ``default_ttl`` supplies a per-class TTL (in ticks) for requests that do
+    not set ``ttl_ticks`` themselves.
     """
 
     def __init__(
@@ -127,13 +133,31 @@ class AdmissionController:
         return r
 
     def _shed(self, req, reason: str, now: int, detail: str = "") -> Rejection:
-        """Reject already-queued work: refund its tenant charge in full (it
-        never consumed a prefill chunk)."""
+        """Reject already-queued work: settle its tenant charge. A request
+        that never ran consumed nothing and gets the full charge back; a
+        preemption requeue keeps the prefill chunks and generated tokens it
+        already burned (the old full-cost refund here let repeated
+        preempt-then-expire cycles drive ``tenant_spent`` below true
+        consumption)."""
         self.sheds += 1
+        self.settle(req)
+        return self._reject(req, reason, now, detail)
+
+    def settle(self, req) -> None:
+        """Refund the unconsumed remainder of ``req``'s tenant charge,
+        exactly once per request (terminal states can be reached from both
+        the scheduler's finish/shed paths and the queue's expiry paths).
+        Consumption can exceed the charge under repeated recompute-
+        preemption — recomputed prefill chunks are real work — so the
+        refund clamps at zero rather than charging beyond the quote."""
+        charged = getattr(req, "charged", 0)
+        if not charged or getattr(req, "settled", False):
+            return
+        req.settled = True
+        refund = max(charged - req.consumed_tokens(), 0)
         tenant = getattr(req, "tenant", "default")
         if tenant in self.tenant_spent:
-            self.tenant_spent[tenant] -= self._cost(req)
-        return self._reject(req, reason, now, detail)
+            self.tenant_spent[tenant] -= refund
 
     # -------------------------------------------------------------- submit
     def submit(self, req, now: int) -> Rejection | None:
@@ -170,6 +194,7 @@ class AdmissionController:
                     req, RejectReason.OVER_BUDGET, now,
                     f"tenant {tenant!r}: {spent}+{cost} tokens > budget {budget}")
             self.tenant_spent[tenant] = spent + cost
+            req.charged = cost
         req.submitted_tick = now
         self.queues[pri].append(req)
         return None

@@ -141,6 +141,23 @@ class Request:
     submitted_tick: int = 0
     admitted: bool = False           # ever held a slot (preemption re-queues stay True)
     rejected: Rejection | None = None
+    # tenant accounting (serve/admission.py): ``charged`` is the quote
+    # debited at submit (len(prompt) + max_new, 0 when the tenant has no
+    # budget); ``prompt_consumed`` high-water-marks how many *original*
+    # prompt tokens have been committed to KV (generated tokens live in
+    # ``out``); ``settled`` guards the terminal one-shot refund of the
+    # unconsumed remainder.
+    charged: int = 0
+    prompt_consumed: int = 0
+    settled: bool = False
+
+    def consumed_tokens(self) -> int:
+        """Tokens this request actually used against its tenant quote:
+        prompt tokens committed (prefilled or prefix-cache reused — both are
+        served tokens) plus every token generated. Recompute-preemption
+        re-prefills are deliberately NOT double-counted: the quote is a cap
+        on service delivered, not on engine work performed."""
+        return self.prompt_consumed + len(self.out)
 
 
 @dataclass
@@ -155,6 +172,12 @@ class SlotMeter:
     rid: int
     prompt_tokens: int = 0
     decode_tokens: int = 0
+    # prompt tokens served from the prefix cache (DESIGN.md §11): their KV
+    # was forked from shared pages, so they were never scheduled into a
+    # prefill chunk and are charged ZERO cycles — this counter is the
+    # explicit record of that delta (the only meter difference vs an
+    # uncached run of the same trace).
+    cached_prompt_tokens: int = 0
     # tokens actually emitted so far (decode tokens + the prefill-riding
     # first token once it exists) — exact even mid-prefill, unlike deriving
     # it from prompt_tokens
@@ -339,6 +362,10 @@ class _Slot:
     # will NaN again, so ping-ponging back would just burn retry ticks.
     retries: int = 0
     fallback: bool = False
+    # prefix cache: committed full blocks of this slot already indexed in
+    # the trie (registration resumes past them; forked blocks count from
+    # admission, so a forked slot never re-registers what it borrowed)
+    reg_blocks: int = 0
 
     @property
     def prefilling(self) -> bool:
@@ -386,6 +413,12 @@ class Scheduler:
         self.track_energy = track_energy
 
         self.paged = rc.kv_layout == "paged"
+        self.prefix_caching = bool(getattr(rc, "prefix_cache", False))
+        if self.prefix_caching and not self.paged:
+            raise ValueError(
+                "rc.prefix_cache needs rc.kv_layout='paged' — prefix sharing "
+                "is page aliasing; the dense layout has nothing to alias"
+            )
         if self.paged:
             pages = (
                 num_pages
@@ -393,7 +426,8 @@ class Scheduler:
                 else num_pages_for(capacity, rc.block_size, max_batch)
             )
             self.mgr: BlockManager | None = BlockManager(
-                pages, rc.block_size, max_batch, capacity
+                pages, rc.block_size, max_batch, capacity,
+                prefix_cache=self.prefix_caching,
             )
             self.caches = init_caches(cfg, rc, max_batch, capacity, num_pages=pages)
         else:
@@ -435,6 +469,12 @@ class Scheduler:
         self._tables_dev = None          # device copy of mgr.tables ...
         self._tables_version = -1        # ... keyed on mgr.version
         self._rr = 0                     # rotating plan start (fairness)
+
+        # --- prefix cache (DESIGN.md §11) ---
+        self.prefix_hits = 0             # admissions that forked a cached prefix
+        self.prefix_tokens_reused = 0    # prompt tokens served without prefill
+        self.prefill_tokens_computed = 0 # prompt tokens actually stepped
+        self._cow_jit = None             # lazily-built shared-page copy step
 
         # --- robustness layer (DESIGN.md §10) ---
         self.admission = admission if admission is not None else AdmissionController()
@@ -504,13 +544,44 @@ class Scheduler:
                     if meter is None:
                         meter = SlotMeter(rid=req.rid, prompt_tokens=len(req.prompt))
                         self._meters_by_rid[req.rid] = meter
-                self.slots[i] = _Slot(
+                sl = _Slot(
                     req=req,
                     prompt=list(req.prompt) + list(req.out),
                     admit_seq=self._admit_counter,
                     meter=meter,
                 )
+                self.slots[i] = sl
                 self._admit_counter += 1
+                if self.prefix_caching:
+                    # longest cached block-aligned prefix of the effective
+                    # prompt: fork its pages (refcount++, zero allocation)
+                    # and start prefill past it — the matched tokens are
+                    # never scheduled and charge zero cycles; at least one
+                    # suffix token always remains to seed the first sample
+                    nodes, matched = self.mgr.lookup_prefix(
+                        sl.prompt, now=self.clock)
+                    if matched:
+                        self.mgr.fork_prefix(i, nodes, now=self.clock)
+                        sl.pos = matched
+                        sl.reg_blocks = len(nodes)
+                        self.prefix_hits += 1
+                        self.prefix_tokens_reused += matched
+                        if sl.meter is not None:
+                            sl.meter.cached_prompt_tokens += matched
+                        if self.spec is not None:
+                            # shared pages back the draft pool too (one
+                            # BlockManager, same tables): whatever draft KV
+                            # the original writer mirrored there is reused
+                            # as-is. If it never did (it was draft-stale),
+                            # drafts just propose worse — verification keeps
+                            # outputs exact regardless of draft content.
+                            sl.draft_pos = matched
+
+    def _note_consumed(self, sl: _Slot) -> None:
+        """High-water-mark the original prompt tokens committed to KV —
+        read by admission.settle at every terminal/requeue transition."""
+        sl.req.prompt_consumed = max(
+            sl.req.prompt_consumed, min(sl.pos, len(sl.req.prompt)))
 
     def _finish(self, i: int) -> None:
         sl = self.slots[i]
@@ -519,6 +590,13 @@ class Scheduler:
             self.deadline_misses += 1
         self.finished.append(sl.req)
         self.final_kv_lens[sl.req.rid] = sl.pos
+        # index the finished sequence's full blocks before releasing: its
+        # pages outlive the slot as cached prefixes (refcount 0, evictable)
+        self._register_prefix(i)
+        self._note_consumed(sl)
+        # satellite fix: refund the unused max_new - generated remainder —
+        # tenants that stop early at EOS no longer burn phantom budget
+        self.admission.settle(sl.req)
         if sl.meter is not None:
             self.finished_meters.append(sl.meter)
             self._meters_by_rid.pop(sl.req.rid, None)
@@ -536,6 +614,10 @@ class Scheduler:
         sl.req.rejected = r
         self.admission.rejections.append(r)
         self.admission.sheds += 1
+        # settle net of what actually ran: prompt tokens committed plus
+        # tokens generated stay charged, only the remainder refunds
+        self._note_consumed(sl)
+        self.admission.settle(sl.req)
         if sl.meter is not None:
             self.finished_meters.append(sl.meter)
             self._meters_by_rid.pop(sl.req.rid, None)
@@ -555,6 +637,14 @@ class Scheduler:
         i = max(cand, key=lambda j: (PRIORITY_RANK[self.slots[j].req.priority],
                                      self.slots[j].admit_seq))
         sl = self.slots[i]
+        # the victim's consumption must be current *before* it re-enters the
+        # queue: if it expires there, the shed settles against these numbers
+        # (satellite fix: the old full-cost refund ignored consumed work)
+        self._note_consumed(sl)
+        # its committed blocks are still perfectly good KV — index them so
+        # the readmission (and anyone sharing the prompt) forks instead of
+        # re-prefilling from scratch
+        self._register_prefix(i)
         if self.mgr is not None:
             self.mgr.release(i)
         self.admission.requeue_front(sl.req)
@@ -605,6 +695,50 @@ class Scheduler:
                 stalled, self.clock, pool,
                 self.ladder.snapshot()["name"], self.stall_episodes,
             )
+
+    # ---------------------------------------------------------- prefix cache
+    def _register_prefix(self, i: int) -> None:
+        """Index slot ``i``'s newly-committed full blocks in the prefix trie
+        (DESIGN.md §11). Called after every commit point and before any
+        release, so a concurrent request sharing the prompt can fork pages
+        the moment their block fills — not only after the writer finishes.
+        O(1) when no new block completed."""
+        if not self.prefix_caching:
+            return
+        sl = self.slots[i]
+        if sl is None:
+            return
+        bs = self.rc.block_size
+        if sl.pos // bs <= sl.reg_blocks:
+            return
+        seq = list(sl.req.prompt) + list(sl.req.out)
+        self.mgr.register_prefix(i, seq[: sl.pos], now=self.clock)
+        sl.reg_blocks = sl.pos // bs
+
+    def _drain_cow(self) -> None:
+        """Perform the device page copies owed by copy-on-write resolutions
+        queued since the last step: one jitted ``pool[:, dst] = pool[:, src]``
+        tree-map per copy, applied to the target caches AND the draft pool
+        (both index pages by the same block tables, so a retabled page must
+        exist in both). src/dst are traced scalars — one compile per cache
+        tree structure for the engine's lifetime. Must run before the step
+        that writes into a COW'd destination page."""
+        if self.mgr is None:
+            return
+        copies = self.mgr.drain_cow_copies()
+        if not copies:
+            return
+        if self._cow_jit is None:
+            self._cow_jit = jax.jit(
+                lambda caches, src, dst: jax.tree.map(
+                    lambda x: x.at[:, dst].set(x[:, src]), caches),
+                donate_argnums=(0,),
+            )
+        for s, d in copies:
+            s, d = jnp.int32(s), jnp.int32(d)
+            self.caches = self._cow_jit(self.caches, s, d)
+            if self.spec is not None:
+                self.spec.caches = self._cow_jit(self.spec.caches, s, d)
 
     # ----------------------------------------------------------------- tick
     def _plan(self):
@@ -751,6 +885,7 @@ class Scheduler:
         if self.spec is not None:
             return self._end_tick(
                 self._spec_tick(tokens, pos, lens, decode_rows, prefill_rows))
+        self._drain_cow()
         tables = self._tables()
 
         # width-adaptive tick: decode-only ticks run the step at width 1
@@ -801,6 +936,7 @@ class Scheduler:
                 for i in main_rows:
                     logits_np[i] = main_np[i]
         self.ticks += 1
+        self.prefill_tokens_computed += sum(int(lens[i]) for i in prefill_rows)
 
         # induced numerical faults corrupt target-policy rows only (the
         # fallback step models the numerically-safe path)
@@ -841,6 +977,8 @@ class Scheduler:
                 self._emit(i, int(toks[i]))
                 if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                     self._finish(i)
+                    continue
+            self._register_prefix(i)
         self._rr = (self._rr + 1) % self.max_batch
         return self._end_tick(True)
 
@@ -979,6 +1117,9 @@ class Scheduler:
                     row=i, rid=sl.req.rid, pos=sl.pos, draft_pos=sl.draft_pos,
                     gap=list(sl.draft_gap), last_token=sl.last_token, g=gi,
                 ))
+        # resolve copy-on-write before anything (draft or verify) writes
+        # into this tick's pages — covers _plan's and the γ-extends above
+        self._drain_cow()
         tables = self._tables()
 
         # quarantined rows run the fallback-policy step instead (masked out
@@ -1048,6 +1189,7 @@ class Scheduler:
         else:
             self.caches, logits = out
         self.ticks += 1
+        self.prefill_tokens_computed += sum(int(lens[i]) for i in prefill_rows)
         scheduled = decode_rows + prefill_rows
         total = float(sum(int(vlens[i]) for i in scheduled)) or 1.0
         if self.track_energy:
@@ -1146,6 +1288,8 @@ class Scheduler:
                 self._emit(i, int(t))
             if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                 self._finish(i)
+            else:
+                self._register_prefix(i)
         # prefill rows: plain chunk bookkeeping + completion sampling from
         # the verify step's per-position logits (column lens-1)
         if prefill_rows or fbset:
@@ -1167,6 +1311,8 @@ class Scheduler:
                     self._emit(i, t)
                     if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                         self._finish(i)
+                        continue
+                self._register_prefix(i)
         # quarantined rows: plain (γ=0) commit from the fallback step's
         # last-column logits — decode rows advance one token, prefill rows
         # advance their chunk
@@ -1184,6 +1330,8 @@ class Scheduler:
                 self._emit(i, t)
                 if len(sl.req.out) >= sl.req.max_new or sl.pos >= self.capacity - 1:
                     self._finish(i)
+                    continue
+            self._register_prefix(i)
         self._rr = (self._rr + 1) % self.max_batch
         return True
 
@@ -1235,9 +1383,23 @@ class Scheduler:
                 "pages": mgr.num_pages,
                 "in_use": mgr.pages_in_use,
                 "high_water": mgr.high_water,
+                "live_pages": mgr.live_pages,
+                "live_high_water": mgr.live_high_water,
                 "occupancy": mgr.pages_in_use / max(mgr.num_pages, 1),
                 "injected_alloc_failures": mgr.injected_failures,
             } if mgr is not None else {"layout": "dense"}),
+            "prefix_cache": ({
+                "enabled": True,
+                "hits": self.prefix_hits,
+                "tokens_reused": self.prefix_tokens_reused,
+                "prefill_tokens_computed": self.prefill_tokens_computed,
+                "cached_pages": mgr.cached_pages,
+                "indexed_pages": len(mgr.prefix),
+                "evictions": mgr.prefix.evictions,
+                "cow_events": mgr.cow_events,
+            } if (mgr is not None and mgr.prefix is not None)
+                else {"enabled": False,
+                      "prefill_tokens_computed": self.prefill_tokens_computed}),
             "stalled_rows_total": self.stalled_rows_total,
             "stall_episodes": self.stall_episodes,
             "engine_stalls": self.engine_stalls,
@@ -1287,13 +1449,24 @@ class Scheduler:
             total += cache_bytes(self.spec.caches)
         if self.mgr is not None:
             frac = self.mgr.high_water / max(self.mgr.num_pages, 1)
-            return {
+            out = {
                 "layout": "paged",
                 "pool_pages": self.mgr.num_pages,
                 "high_water_pages": self.mgr.high_water,
+                "live_high_water_pages": self.mgr.live_high_water,
                 "cache_bytes_reserved": total,
                 "cache_bytes_high_water": int(total * frac),
             }
+            if self.mgr.prefix is not None:
+                out.update(
+                    prefix_hits=self.prefix_hits,
+                    prefix_tokens_reused=self.prefix_tokens_reused,
+                    prefill_tokens_computed=self.prefill_tokens_computed,
+                    prefix_cached_pages=self.mgr.cached_pages,
+                    prefix_evictions=self.mgr.prefix.evictions,
+                    cow_events=self.mgr.cow_events,
+                )
+            return out
         return {
             "layout": "dense",
             "reserved_tokens": dense_cache_tokens(self.max_batch, self.capacity),

@@ -25,7 +25,13 @@ Key mechanics:
   pools: a page id addresses the same row in the target and draft pools, so
   fork/rollback is a single ``truncate`` and preemption's ``release`` frees
   both sides at once. Prefill chunks are mirrored into the draft pool (cheap
-  at the draft width) so a slot can draft from its first decode tick.
+  at the draft width) so a slot can draft from its first decode tick. Under
+  ``rc.prefix_cache`` the rules still hold per *page*: rollback/release
+  decrement refcounts instead of freeing shared pages, the scheduler applies
+  every copy-on-write page copy to BOTH pools before the next write, and a
+  prefix-forked slot inherits whatever draft KV its source mirrored into the
+  shared pages (possibly none — bad draft content only lowers acceptance,
+  never correctness, because verification judges every candidate).
 - **Acceptance** — greedy exact-match at temperature 0 (every emitted token
   is a target argmax, so the emitted sequence matches non-speculative greedy
   decode); standard speculative rejection sampling otherwise, with
