@@ -21,6 +21,7 @@ BENCHES = [
     "kernel_bench",         # kernels: exactness sweep + µs/call
     "serve_bench",          # paged KV + chunked-prefill vs legacy engine
     "spec_bench",           # speculative int2-draft decode vs PR 4 baseline
+    "shard_bench",          # dp×tp sharded vs single-device A/B (8-dev mesh)
     "edge_planner",         # §IV: deployment planner (beyond paper)
     "roofline_all",         # deliverable (g): aggregate dry-run rooflines
 ]

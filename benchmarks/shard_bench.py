@@ -1,0 +1,165 @@
+"""Sharded-vs-dense serving A/B (parallel/serve_mesh.py, DESIGN.md §12).
+
+Runs the same prompt set through the single-device scheduler and the
+dp=2 × tp=4 sharded scheduler (8-device host-platform CPU mesh) at a mixed
+int8/int2 policy and reports:
+
+- tokens/s for both engines (CPU shard_map is a *correctness* vehicle — the
+  mesh overhead on 8 host threads is reported, not celebrated)
+- bytes-on-wire by bitwidth from the trace-time collective meter, against
+  the bf16 bytes the same gathers would have moved — the
+  quantize-before-all-gather win (≤ bits/16, asserted)
+- per-device cycle balance from the exact integer attribution (max/mean of
+  the per-device serial-cycle shares)
+- page-ownership balance across tp groups (BlockManager.table_shard)
+
+Greedy tokens MUST match bit-for-bit between the two engines; any mismatch
+is a hard SystemExit (this is the PR's gate, not a soft metric).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/shard_bench.py          # writes JSON
+    ... shard_bench.py --fast                                    # smoke, no JSON
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, get_config
+from repro.models.transformer import model_spec
+from repro.parallel.sharding import materialize
+from repro.serve import Request, Scheduler
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_shard.json")
+
+GQA = ModelConfig(
+    name="gqa_shard_bench", family="dense", attn_type="gqa",
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=4, d_ff=128,
+    vocab_size=128, tie_embeddings=False,
+)
+
+CASES = [
+    ("gqa_int8_int2", GQA, "attn.*=int8,mlp.*=int2,*=bf16"),
+    ("mla_moe_int8_int2", "deepseek-v2-lite-16b_smoke",
+     "mla.*=int8,moe.*=int2,mlp.*=int2,*=bf16"),
+]
+
+
+def _drive(cfg, rc, params, prompts, mesh, max_new):
+    eng = Scheduler(cfg, rc, params, capacity=64, max_batch=4,
+                    track_energy=True, mesh=mesh)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=list(p), max_new=max_new))
+    t0 = time.perf_counter()
+    done = eng.run()
+    jax.effects_barrier()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    return eng, {r.rid: list(r.out) for r in done}, toks, wall
+
+
+def run(fast: bool = False) -> dict:
+    if jax.device_count() < 8:
+        msg = (f"skipped: {jax.device_count()} devices "
+               "(needs XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        print(f"[shard_bench] {msg}")
+        return {"skipped": msg}
+
+    rng = np.random.default_rng(11)
+    n_req, max_new = (4, 4) if fast else (8, 8)
+    out: dict = {"mesh": "dp=2,tp=4", "devices": 8, "cases": {}}
+
+    for name, cfg_ref, policy in CASES[: 1 if fast else 2]:
+        cfg = get_config(cfg_ref) if isinstance(cfg_ref, str) else cfg_ref
+        rc = RunConfig(
+            quant_policy=policy, kv_layout="paged", kv_cache_dtype="int8",
+            block_size=8, dtype="float32", param_dtype="float32",
+            prefill_chunk=8,
+        )
+        params = materialize(model_spec(cfg), jax.random.PRNGKey(0), jnp.float32)
+        prompts = [[int(t) for t in rng.integers(0, cfg.vocab_size,
+                                                 rng.integers(4, 14))]
+                   for _ in range(n_req)]
+
+        ref, ref_toks, n_ref, wall_ref = _drive(cfg, rc, params, prompts,
+                                                None, max_new)
+        shd, shd_toks, n_shd, wall_shd = _drive(cfg, rc, params, prompts,
+                                                "2,4", max_new)
+
+        if shd_toks != ref_toks:
+            raise SystemExit(
+                f"[shard_bench] {name}: sharded greedy tokens DIVERGED from "
+                f"the single-device run — the bit-exactness gate failed")
+        if shd.cycles_by_bits != ref.cycles_by_bits:
+            raise SystemExit(
+                f"[shard_bench] {name}: merged cycle totals diverged")
+
+        comms = shd.comms_summary()
+        wire = {}
+        for b, r in sorted(comms["by_bits"].items()):
+            wire[str(b)] = {
+                "payload_bytes": r["payload_bytes"],
+                "scale_bytes": r["scale_bytes"],
+                "bf16_bytes": r["bf16_bytes"],
+                "ratio_vs_bf16": (r["payload_bytes"] / r["bf16_bytes"]
+                                  if r["bf16_bytes"] else 0.0),
+            }
+            if b < 16 and r["payload_bytes"] * 16 > r["bf16_bytes"] * max(b, 8):
+                raise SystemExit(
+                    f"[shard_bench] {name}: int{b} gather moved more than "
+                    f"bits/16 of the bf16 volume")
+
+        att = shd.device_attribution()
+        balance = {}
+        for b, shares in att.items():
+            s = shares.astype(np.float64).reshape(-1)
+            balance[str(b)] = {
+                "per_device_cycles": [int(v) for v in s],
+                "max_over_mean": float(s.max() / s.mean()) if s.mean() else 1.0,
+            }
+
+        pages = [int((shd.mgr.table_shard(r, 4) != shd.mgr.trash).sum())
+                 for r in range(4)]
+
+        case = {
+            "policy": policy,
+            "requests": n_req,
+            "tokens": n_shd,
+            "dense_tokens_per_s": n_ref / wall_ref if wall_ref else 0.0,
+            "sharded_tokens_per_s": n_shd / wall_shd if wall_shd else 0.0,
+            "bit_exact": True,
+            "wire_bytes_by_bits": wire,
+            "wire_bytes_total": comms["bytes_moved"],
+            "bf16_bytes_equivalent": comms["bf16_bytes"],
+            "device_cycle_balance": balance,
+            "tp_page_ownership": pages,
+            "moe_dropped_tokens": shd.moe_dropped_tokens,
+        }
+        out["cases"][name] = case
+        print(f"[shard_bench] {name}: bit-exact ✓  "
+              f"{case['sharded_tokens_per_s']:.1f} tok/s sharded vs "
+              f"{case['dense_tokens_per_s']:.1f} single  "
+              f"wire {case['wire_bytes_total']} B "
+              f"(bf16 {case['bf16_bytes_equivalent']} B)")
+
+    if not fast:
+        with open(OUT, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[shard_bench] wrote {OUT}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    run(fast=args.fast)

@@ -15,6 +15,20 @@ for comparison — watch the tok/s gap when prompts vary in length.
 per tick against the near-free int2 view of the same weights and the target
 verifies them in one batched mixed step (DESIGN.md §9; default off — off-path
 behavior is identical to the plain scheduler).
+
+Multi-device serving (DESIGN.md §12) lives on the full launcher — the same
+scheduler, shard_map-ped over a dp×tp mesh with quantize-before-all-gather
+collectives. ``--devices N`` forces N host-platform CPU devices (must be
+the first thing jax sees, which is why the launcher scans argv before
+importing jax) and ``--mesh dp,tp`` shards the step:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b_smoke \
+        --devices 8 --mesh 2,4 --kv-layout paged --kv-dtype int8 \
+        --policy 'attn.*=int8,mlp.*=int2,*=bf16' --energy
+
+dp shards batch rows, tp shards attention head groups / dense-FFN columns /
+MoE experts. Greedy tokens are bit-identical to the single-device run; the
+exit summary prints wire bytes by bitwidth and MoE capacity drops.
 """
 
 from __future__ import annotations

@@ -62,6 +62,17 @@ echo "== spec smoke (speculative int2-draft decode, gamma=2 greedy)"
 python -m pytest -x -q -p no:randomly tests/test_spec.py
 python benchmarks/spec_bench.py --fast
 
+echo "== dist smoke (dp×tp sharded serving on an 8-device host mesh)"
+# the sharded-serving gate (DESIGN.md §12) runs in its own process so the
+# forced 8-device CPU topology cannot leak into the rest of the suite:
+# bit-exact sharded-vs-single greedy decode at mixed int8/int2 (GQA + MLA),
+# exact per-device cycle attribution, quantize-before-all-gather byte caps,
+# and the sharded A/B bench (hard-fails on any token mismatch)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -x -q -p no:randomly tests/test_mesh_serve.py
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/shard_bench.py --fast
+
 echo "== tier-1 tests"
 # -p no:randomly: if pytest-randomly is ever installed it would shuffle
 # test order and reseed per test — the conformance suite pins its own seeds

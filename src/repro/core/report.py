@@ -40,7 +40,15 @@ __all__ = [
     "ugemm_comparison",
     "slot_energy",
     "spec_energy_summary",
+    "INTERCONNECT_PJ_PER_BYTE",
 ]
+
+# Interconnect energy price for the sharded-serving byte meter
+# (parallel.collectives): edge-class chip-to-chip links run ~5-20 pJ/bit;
+# we charge a flat 10 pJ/bit = 80 pJ/byte on *wire* bytes (quantized
+# payload + scales), which is exactly the term quantize-before-all-gather
+# shrinks by bits/16 versus gathering bf16 activations.
+INTERCONNECT_PJ_PER_BYTE = 80.0
 
 
 @dataclass(frozen=True)
@@ -101,6 +109,10 @@ class EnergyReport:
     # per-bitwidth subtotal rollup: bits -> {layers, cycles, macs,
     # latency_s, energy_j, unit_latency_s, unit_energy_j, baseline}
     by_bits: dict = field(default_factory=dict)
+    # sharded serving: bytes each quantized collective moved, priced at
+    # INTERCONNECT_PJ_PER_BYTE — bits -> {bytes_moved, bf16_bytes, energy_j}
+    interconnect: dict = field(default_factory=dict)
+    interconnect_energy_j: float = 0.0
 
     @property
     def is_mixed(self) -> bool:
@@ -127,12 +139,25 @@ class EnergyReport:
                 f"  int{b} subtotal: {s['layers']} GEMMs, {s['cycles']} cycles, "
                 f"{s['energy_j']*1e6:.2f} uJ ({100*s['energy_j']/tot:.1f}%)"
             )
+        for b in sorted(self.interconnect, reverse=True):
+            ic = self.interconnect[b]
+            saved = ic["bf16_bytes"] - ic["bytes_moved"]
+            lines.append(
+                f"  wire int{b}: {ic['bytes_moved']} B moved, "
+                f"{ic['energy_j']*1e6:.3f} uJ interconnect "
+                f"(bf16 would move {ic['bf16_bytes']} B; saved {saved} B)"
+            )
         lines.append(
             f"total: {self.total_cycles} cycles, {self.total_latency_s*1e3:.3f} ms, "
             f"{self.total_energy_j*1e6:.2f} uJ "
             f"(16x16 unit: {self.unit_latency_s*1e3:.3f} ms, "
             f"{self.unit_energy_j*1e6:.2f} uJ)"
         )
+        if self.interconnect_energy_j:
+            lines.append(
+                f"interconnect total: {self.interconnect_energy_j*1e6:.3f} uJ "
+                f"at {INTERCONNECT_PJ_PER_BYTE:.0f} pJ/B"
+            )
         if self.baseline:
             b = self.baseline
             lines.append(
@@ -153,12 +178,19 @@ def _cycles(stats_field) -> int:
     return int(np.asarray(stats_field, dtype=np.int64).sum())
 
 
-def energy_report(tree, *, bits: int | None = None, variant: str = "serial") -> EnergyReport:
+def energy_report(
+    tree, *, bits: int | None = None, variant: str = "serial", comms: dict | None = None
+) -> EnergyReport:
     """Roll a stats tree up into the per-request PPA/energy report.
 
     ``bits=None`` (the default for mixed-precision policies) charges every
     layer at the bitwidth recorded in its CapturedGemm; an explicit ``bits``
-    overrides uniformly (the legacy single-backend accounting)."""
+    overrides uniformly (the legacy single-backend accounting).
+
+    ``comms`` is a sharded scheduler's ``comms_summary()`` (or any dict with
+    a ``by_bits`` entry of ``{bits: {payload_bytes, scale_bytes,
+    bf16_bytes}}``): the bytes each quantized collective moved become the
+    report's interconnect column at ``INTERCONNECT_PJ_PER_BYTE``."""
     from ..quant.capture import tree_entries  # local: core must not need quant
 
     if variant not in ("serial", "parallel"):
@@ -211,6 +243,16 @@ def energy_report(tree, *, bits: int | None = None, variant: str = "serial") -> 
     elif rep.bits is not None:
         rep.baseline = ugemm_comparison(rep.bits, variant)
         rep.unit_power_w = ppa_model(variant).power_w(rep.bits, 16, 16, 16)
+    if comms:
+        for b, r in comms.get("by_bits", comms).items():
+            moved = int(r.get("payload_bytes", 0)) + int(r.get("scale_bytes", 0))
+            e_j = moved * INTERCONNECT_PJ_PER_BYTE * 1e-12
+            rep.interconnect[int(b)] = {
+                "bytes_moved": moved,
+                "bf16_bytes": int(r.get("bf16_bytes", 0)),
+                "energy_j": e_j,
+            }
+            rep.interconnect_energy_j += e_j
     return rep
 
 

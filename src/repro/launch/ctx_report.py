@@ -1,0 +1,41 @@
+"""Side-effect-free sharding-context reporting helpers.
+
+``launch.dryrun`` pins a 512-device ``XLA_FLAGS`` at import time, which
+makes it unimportable from any process that already initialized jax with a
+different device count (e.g. the 8-device mesh-serving test process). The
+pure formatting of a :class:`~repro.parallel.sharding.MeshContext`'s
+accounting lives here instead, so both dryrun rows and tests consume the
+same code path.
+"""
+
+from __future__ import annotations
+
+__all__ = ["sharding_report", "format_dropped_rules"]
+
+
+def sharding_report(ctx) -> dict:
+    """The context-accounting block a dryrun row / health snapshot carries:
+    divisibility replications (counted, warned once per site) and rules
+    whose mesh axes were absent at ``use_mesh()`` time (recorded, never
+    silently vanished — the "pod"-axis-rule-on-a-pod-less-mesh case)."""
+    if ctx is None:
+        return {"replicated_dims": 0, "dropped_rules": {}}
+    return {
+        "replicated_dims": int(ctx.replicated_dims),
+        "dropped_rules": {str(k): v for k, v in ctx.dropped_rules.items()},
+    }
+
+
+def format_dropped_rules(ctx) -> list[str]:
+    """Human-readable lines, one per dropped rule — empty when clean."""
+    rep = sharding_report(ctx)
+    lines = [
+        f"sharding: rule {name!r} -> {ax!r} dropped (axis absent from mesh)"
+        for name, ax in sorted(rep["dropped_rules"].items())
+    ]
+    if rep["replicated_dims"]:
+        lines.append(
+            f"sharding: {rep['replicated_dims']} dim(s) replicated on "
+            "non-dividing mesh axes (see ReplicatedDimWarning)"
+        )
+    return lines

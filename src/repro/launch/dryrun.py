@@ -48,6 +48,7 @@ from ..parallel.state_sharding import (
     with_sharding,
 )
 from ..roofline import analyze
+from .ctx_report import format_dropped_rules, sharding_report
 from .mesh import make_production_mesh
 
 # ---------------------------------------------------------------- cell plan
@@ -244,7 +245,7 @@ def run_cell(
     name = f"{arch}×{shape.name}×{'multi' if multi_pod else 'single'}"
 
     t0 = time.time()
-    with use_mesh(mesh, overrides=rc.sharding_overrides):
+    with use_mesh(mesh, overrides=rc.sharding_overrides) as ctx:
         fn, args, jit_kw = build_cell(arch, shape, rc)
         lowered = jax.jit(fn, **jit_kw).lower(*args)
         compiled = lowered.compile()
@@ -252,6 +253,8 @@ def run_cell(
         cost = compiled.cost_analysis()
         hlo = compiled.as_text()
     dt = time.time() - t0
+    for line in format_dropped_rules(ctx):
+        print(f"[warn] {name}: {line}", flush=True)
 
     per_chip = getattr(mem, "temp_size_in_bytes", 0) + getattr(
         mem, "argument_size_in_bytes", 0
@@ -293,6 +296,9 @@ def run_cell(
         "fits": bool(peak <= 16e9),
         "xla_cost_flops": report.xla_cost_flops,
         "unknown_trip_loops": report.unknown_trip_loops,
+        # sharding-context accounting (satellite fix): rules whose axes were
+        # absent from this mesh are *reported* here, not silently dropped
+        **sharding_report(ctx),
     }
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)

@@ -10,7 +10,20 @@ examples/serve_lm.py and benchmarks/serve_bench.py.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --devices must take effect before jax picks its backend: scan argv ahead
+# of the regular argparse pass and pin the host-platform device count (this
+# is how a CPU box runs the dp×tp scheduler mesh, e.g. --devices 8 --mesh 2,4)
+if "--devices" in sys.argv:
+    _n = int(sys.argv[sys.argv.index("--devices") + 1])
+    if _n > 0:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
 
 import jax
 import numpy as np
@@ -65,6 +78,14 @@ def main(argv=None):
     ap.add_argument("--draft-policy", default="*=int2",
                     help="QuantPolicy for the speculative draft pass "
                          "(ignored unless --spec-gamma > 0)")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="shard the scheduler's mixed step over a dp×tp "
+                         "device mesh (tensor/expert-parallel with "
+                         "quantize-before-all-gather; DESIGN.md §12). "
+                         "Scheduler engine only, e.g. --mesh 2,4")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host-platform devices before jax starts "
+                         "(CPU mesh for CI/testing; 0 = leave alone)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -119,6 +140,11 @@ def main(argv=None):
     if not use_scheduler and rc.spec_gamma:
         print("[serve] legacy engine cannot speculate: disabling --spec-gamma")
         rc = dataclasses.replace(rc, spec_gamma=0, draft_policy=None)
+    if args.mesh and not use_scheduler:
+        raise SystemExit("[serve] --mesh needs the scheduler engine")
+    if args.mesh and rc.spec_gamma:
+        print("[serve] speculative decoding is single-device: disabling --spec-gamma")
+        rc = dataclasses.replace(rc, spec_gamma=0, draft_policy=None)
 
     with use_mesh(mesh):
         params = init(cfg, rc, jax.random.PRNGKey(args.seed))
@@ -147,6 +173,7 @@ def main(argv=None):
                 temperature=args.temperature, seed=args.seed,
                 draft_params=draft_params,
                 admission=adm, track_energy=args.energy,
+                mesh=args.mesh,
             )
         else:
             eng = Engine(
@@ -197,6 +224,18 @@ def main(argv=None):
                   f"prefill_computed={p['prefill_tokens_computed']} "
                   f"cached_pages={p['cached_pages']} "
                   f"evictions={p['evictions']} cow={p['cow_events']}")
+        if args.mesh:
+            m = h["mesh"]
+            c = m["comms"]
+            by = {b: r["payload_bytes"] for b, r in c["by_bits"].items()}
+            print(f"  mesh: dp={m['dp']} tp={m['tp']} devices={m['devices']} "
+                  f"moe_dropped_tokens={m['moe_dropped_tokens']} "
+                  f"wire_bytes={c['bytes_moved']} by_bits={by} "
+                  f"(bf16 equivalent {c['bf16_bytes']})")
+            s = h["sharding"]
+            if s["dropped_rules"] or s["replicated_dims"]:
+                print(f"  sharding: replicated_dims={s['replicated_dims']} "
+                      f"dropped_rules={s['dropped_rules']}")
         if rc.spec_gamma:
             s = eng.spec_summary()
             print(f"  spec: gamma={s['spec_gamma']} draft={s['draft_policy']} "

@@ -101,9 +101,15 @@ def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
     return cache
 
 
-def _quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    # per-(batch, position) scale over heads*dim
+def _quantize_kv(x: jnp.ndarray, sync=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    # per-(batch, position) scale over heads*dim; ``sync`` (mesh serving)
+    # max-merges the raw amax across tensor-parallel head shards *before*
+    # the scale transform, so the synced scale is bit-identical to the
+    # single-device all-heads reduction (keep the division form below — it
+    # is the form the single-device cache writes compile to)
     amax = jnp.abs(x.astype(jnp.float32)).max(axis=tuple(range(2, x.ndim)))
+    if sync is not None:
+        amax = sync(amax)
     scale = jnp.maximum(amax, 1e-8) / 127.0
     q = jnp.round(x.astype(jnp.float32) / scale.reshape(scale.shape + (1,) * (x.ndim - 2)))
     return jnp.clip(q, -128, 127).astype(jnp.int8), scale
@@ -141,13 +147,31 @@ def _paged_targets(view: KVView, B: int, S: int, num_rows: int):
 
 def _write_one(cache: dict, out: dict, name: str, val, pos, view: KVView | None):
     """Write ``val`` (B, S, ...) into one cache buffer (plus its scale)."""
+    from ..parallel import collectives as dist  # trace-time mesh program
+
+    prog = dist.current_program()
+    sync = None
+    if prog is not None and name in prog.kv_sync_names:
+        sync = lambda a: prog.sync_amax_tp(a, f"kv.{name}")  # noqa: E731
     buf = cache[name]
     if buf.dtype == jnp.int8:
-        q, s = _quantize_kv(val)
+        q, s = _quantize_kv(val, sync)
         vals = [(name, q), (name + "_scale", s.astype(jnp.float32))]
     else:
         vals = [(name, val.astype(buf.dtype))]
-    B, S = val.shape[:2]
+    if (
+        prog is not None
+        and prog.write_view is not None
+        and view is not None
+        and view.tables is not None
+    ):
+        # paged pool is replicated across dp (pages are shared by all rows),
+        # so every device must write every row's tokens: gather the dp-local
+        # rows — already quantized, so int8 planes on the wire — and address
+        # through the full-batch write view
+        vals = [(n, prog.gather_rows_dp(v, f"kv.{n}")) for n, v in vals]
+        view = prog.write_view
+    B, S = vals[0][1].shape[:2]
     for n, v in vals:
         dst = cache[n]
         if view is None:

@@ -102,7 +102,7 @@ def _expert_mm(w, xs: jnp.ndarray, backend, name: str) -> jnp.ndarray:
     else:
         wrap = lambda wi: {"kernel": wi}
         bits = backend.bits
-    cap = stats_capture.capturing()
+    cap = stats_capture.stats_wanted()
     fn = lambda wi, xi: dense(wrap(wi), xi, backend=backend, name=name,
                               return_stats=cap)
     out = jax.vmap(fn)(w, xs)
@@ -160,6 +160,14 @@ def moe_ffn(
         xg_all, idx_g
     )                                                                # (G,E*cap,D), (G,gs*k)
 
+    # capacity overflow is *counted*, never silent: the drop total rides the
+    # capture tree as a named scalar (per layer through the scan), which the
+    # mesh scheduler surfaces in health() on every tick
+    if stats_capture.capturing():
+        stats_capture.push_scalar(
+            "moe.dropped_tokens", (dest == E * cap).sum().astype(jnp.int32)
+        )
+
     # EP resharding: groups (batch/seq-sharded) -> experts (model-sharded).
     # The token dim keeps its data sharding so this lowers to an all-to-all
     # over `model` (leaving it unconstrained made XLA all-gather the whole
@@ -167,11 +175,29 @@ def moe_ffn(
     xin = xin.reshape(G, E, cap, D).transpose(1, 0, 2, 3).reshape(E, G * cap, D)
     xin = constrain(xin, "experts", "group_data", None)
 
+    # expert parallelism under the mesh-serving program: the expert slabs
+    # arrive tp-sharded on the experts axis (detected by shape — the slab's
+    # leading dim E_local < cfg E), so slice the dispatched buffer to this
+    # device's experts and all-gather the outputs back to full E after the
+    # down-projection (full precision: the gate-weighted combine must stay
+    # bit-exact, so EP output resharding never quantizes)
+    from ..parallel import collectives as dist
+
+    prog = dist.current_program()
+    we = p["experts"]["w_gate"]
+    E_w = (we["qkernel"] if isinstance(we, dict) else we).shape[0]
+    ep = prog is not None and E_w != E
+    if ep:
+        t = jax.lax.axis_index(prog.tp_axis)
+        xin = jax.lax.dynamic_slice_in_dim(xin, t * E_w, E_w, axis=0)
+
     g = _expert_mm(p["experts"]["w_gate"], xin, backend, "moe.gate")
     u = _expert_mm(p["experts"]["w_up"], xin, backend, "moe.up")
     h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
     h = constrain(h, "experts", "group_data", None)
     yout = _expert_mm(p["experts"]["w_down"], h, backend, "moe.down")  # (E, B*cap, D)
+    if ep:
+        yout = prog.gather_experts(yout, "moe.down")
 
     # reshard back: experts -> groups
     yg = yout.reshape(E, G, cap, D).transpose(1, 0, 2, 3).reshape(G, E * cap, D)

@@ -1,0 +1,230 @@
+"""Quantize-before-all-gather collectives + the trace-time mesh program.
+
+The sharded serving step (parallel/serve_mesh.py) traces the unmodified
+model body inside ``jax.shard_map``. Model layers cannot take a mesh handle
+through their signatures without rewriting every call site, so the step
+activates a :class:`MeshProgram` for the duration of the trace and the quant
+/ attention / MoE layers consult it lazily (``current_program()``) — exactly
+the pattern ``quant.capture`` uses for stats. All state here is read at
+*trace time only*; the compiled program carries ordinary collectives.
+
+The paper's thesis applied to the interconnect: a tensor-parallel GEMM whose
+input features are sharded (o-proj, down-proj) all-gathers the *quantized*
+planes, not the bf16 activations — int8 moves half the bytes, int4 a
+quarter (2 values/byte), int2 an eighth (4 values/byte), plus the f32
+scales. Dequantization happens after the collective, on the gathered int
+planes, with scales synced by ``lax.pmax`` over the raw amax (max is exact,
+so the synced scale is bit-identical to the single-device global scale —
+the whole bit-exactness story rests on this).
+
+Every collective is metered at trace time (shapes are static): the
+:class:`MeshProgram` accumulates ``bytes_moved`` per collective per
+bitwidth, which the scheduler rolls into per-tick interconnect totals and
+``core.report`` prices as an interconnect energy column.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "MeshProgram",
+    "current_program",
+    "activate",
+    "pack_wire",
+    "unpack_wire",
+    "wire_bits",
+]
+
+
+# ----------------------------------------------------------- wire bit-packing
+def wire_bits(bits: int, feature_dim: int) -> int:
+    """Bitwidth actually used on the wire for a quantized gather: sub-byte
+    planes pack ``8 // bits`` values per byte along the feature axis, which
+    needs the local feature count to be a multiple of the packing factor —
+    otherwise the plane ships unpacked at 8 bits (still metered honestly)."""
+    if bits >= 8:
+        return 8
+    return bits if feature_dim % (8 // bits) == 0 else 8
+
+
+def pack_wire(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack an int8 plane of ``bits``-wide values along the last axis.
+
+    Values are offset-encoded (``+ 2^(bits-1)``: int2's {-1,0,1} → {1,2,3},
+    int4's [-7,7] → [1,15]) and packed little-endian within each byte, so a
+    tiled all-gather of packed chunks concatenates to the packed form of the
+    concatenated plane (chunk boundaries stay byte-aligned)."""
+    if wire_bits(bits, q.shape[-1]) == 8:
+        return q
+    vpb = 8 // bits
+    off = 1 << (bits - 1)
+    g = q.reshape(q.shape[:-1] + (q.shape[-1] // vpb, vpb)).astype(jnp.int32) + off
+    shifts = (jnp.arange(vpb, dtype=jnp.int32) * bits)[(None,) * (g.ndim - 1)]
+    return (g << shifts).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack_wire(p: jnp.ndarray, bits: int, features: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_wire`; ``features`` is the unpacked last-dim."""
+    if wire_bits(bits, features) == 8:
+        return p
+    vpb = 8 // bits
+    off = 1 << (bits - 1)
+    shifts = (jnp.arange(vpb, dtype=jnp.int32) * bits)[(None,) * p.ndim]
+    vals = (p[..., None].astype(jnp.int32) >> shifts) & ((1 << bits) - 1)
+    return (vals - off).astype(jnp.int8).reshape(p.shape[:-1] + (features,))
+
+
+# ------------------------------------------------------------- comms metering
+@dataclass
+class CollectiveRecord:
+    """Static per-trace byte accounting for one collective call site."""
+
+    calls: int = 0
+    elems: int = 0            # logical elements moved (pre-packing)
+    payload_bytes: int = 0    # bytes actually on the wire (post-packing)
+    scale_bytes: int = 0      # f32 scale sync riding the collective
+    bf16_bytes: int = 0       # what the same gather would move at bf16
+
+    def add(self, elems: int, payload: int, scales: int) -> None:
+        self.calls += 1
+        self.elems += elems
+        self.payload_bytes += payload
+        self.scale_bytes += scales
+        self.bf16_bytes += 2 * elems
+
+
+@dataclass
+class MeshProgram:
+    """Trace-time description of one sharded step's distributed behavior.
+
+    Consulted lazily by quant.qlinear (feature gathers + amax sync),
+    models.attention (KV quantize sync + dp row gather for pool writes) and
+    models.moe (expert-parallel slab slicing + output gather)."""
+
+    dp_axis: str = "data"
+    tp_axis: str = "model"
+    dp: int = 1
+    tp: int = 1
+    # GEMM names whose *input features* are tp-sharded (upstream GEMM was
+    # column-parallel) and must be gathered before the contraction
+    gather_gemms: frozenset = frozenset()
+    # MoE expert GEMMs (expert-parallel over tp; stats concat on merge)
+    expert_gemms: frozenset = frozenset()
+    # KV cache leaves with a tp-sharded head axis (their per-token quant
+    # scale must be amax-synced over tp); empty for MLA (latent has no heads)
+    kv_sync_names: frozenset = frozenset()
+    # full-batch write view for the replicated paged pool (None = dense
+    # layout: caches are batch-sharded and rows write locally)
+    write_view: object = None
+    # (label, bits) -> CollectiveRecord, filled during trace
+    meter: dict = field(default_factory=dict)
+
+    # ---------------------------------------------------------------- meter
+    def _rec(self, label: str, bits: int) -> CollectiveRecord:
+        return self.meter.setdefault((label, int(bits)), CollectiveRecord())
+
+    def meter_snapshot(self) -> dict:
+        """{(label, bits): dict} — plain data, safe to accumulate host-side."""
+        return {
+            k: {
+                "calls": r.calls,
+                "elems": r.elems,
+                "payload_bytes": r.payload_bytes,
+                "scale_bytes": r.scale_bytes,
+                "bf16_bytes": r.bf16_bytes,
+            }
+            for k, r in self.meter.items()
+        }
+
+    # ---------------------------------------------------------- scale syncs
+    def sync_amax_dp(self, amax: jnp.ndarray, label: str) -> jnp.ndarray:
+        """Global amax over the dp axis (activation rows are dp-sharded)."""
+        if self.dp == 1:
+            return amax
+        self._rec(f"amax:{label}", 32).add(amax.size, 0, 4 * amax.size * (self.dp - 1))
+        return lax.pmax(amax, self.dp_axis)
+
+    def sync_amax_tp(self, amax: jnp.ndarray, label: str) -> jnp.ndarray:
+        """Global amax over the tp axis (features/heads are tp-sharded)."""
+        if self.tp == 1:
+            return amax
+        self._rec(f"amax:{label}", 32).add(amax.size, 0, 4 * amax.size * (self.tp - 1))
+        return lax.pmax(amax, self.tp_axis)
+
+    # ---------------------------------------------------- quantized gathers
+    def gather_features_quant(self, q: jnp.ndarray, bits: int, label: str) -> jnp.ndarray:
+        """All-gather a locally-quantized int plane over tp along the last
+        (feature) axis — packed to ``bits`` on the wire when the local
+        feature count allows. Returns the full-feature int8 plane."""
+        if self.tp == 1:
+            return q
+        k_local = q.shape[-1]
+        wb = wire_bits(bits, k_local)
+        packed = pack_wire(q, bits)
+        elems = q.size * (self.tp - 1)
+        self._rec(f"gather:{label}", bits).add(elems, elems * wb // 8, 0)
+        full = lax.all_gather(packed, self.tp_axis, axis=q.ndim - 1, tiled=True)
+        return unpack_wire(full, bits, k_local * self.tp)
+
+    def gather_features_f(self, x: jnp.ndarray, label: str) -> jnp.ndarray:
+        """Full-precision feature gather over tp (the bf16 baseline path —
+        metered so the A/B byte comparison is honest)."""
+        if self.tp == 1:
+            return x
+        elems = x.size * (self.tp - 1)
+        self._rec(f"gather:{label}", 16).add(elems, elems * x.dtype.itemsize, 0)
+        return lax.all_gather(x, self.tp_axis, axis=x.ndim - 1, tiled=True)
+
+    def gather_rows_dp(self, x: jnp.ndarray, label: str, *, bits: int | None = None) -> jnp.ndarray:
+        """All-gather dp-local batch rows to the full batch along axis 0
+        (paged-pool KV writes: every device writes every row's pages)."""
+        if self.dp == 1:
+            return x
+        b = bits if bits is not None else 8 * x.dtype.itemsize
+        elems = x.size * (self.dp - 1)
+        self._rec(f"gather:{label}", b).add(elems, elems * x.dtype.itemsize, 0)
+        return lax.all_gather(x, self.dp_axis, axis=0, tiled=True)
+
+    def gather_experts(self, y: jnp.ndarray, label: str) -> jnp.ndarray:
+        """All-gather expert-local outputs over tp along the experts axis
+        (axis 0). Full precision: the combine's gate-weighted sum must be
+        bit-identical to the single-device result, so EP output resharding
+        is the one collective that never quantizes."""
+        if self.tp == 1:
+            return y
+        elems = y.size * (self.tp - 1)
+        self._rec(f"gather:{label}", 16).add(elems, elems * y.dtype.itemsize, 0)
+        return lax.all_gather(y, self.tp_axis, axis=0, tiled=True)
+
+
+_PROGRAM: list[MeshProgram] = []
+
+
+def current_program() -> MeshProgram | None:
+    return _PROGRAM[-1] if _PROGRAM else None
+
+
+@contextmanager
+def activate(prog: MeshProgram):
+    """Activate ``prog`` for the enclosed trace (one per shard_map body)."""
+    _PROGRAM.append(prog)
+    try:
+        yield prog
+    finally:
+        _PROGRAM.pop()
+
+
+def _selftest_pack_roundtrip() -> None:  # pragma: no cover — debugging aid
+    import numpy as np
+
+    for bits in (2, 4, 8):
+        lo = -(1 << (bits - 1)) + 1
+        hi = (1 << (bits - 1)) - 1
+        q = jnp.asarray(np.random.default_rng(0).integers(lo, hi + 1, (3, 16)), jnp.int8)
+        assert (unpack_wire(pack_wire(q, bits), bits, 16) == q).all()

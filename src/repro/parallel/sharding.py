@@ -17,6 +17,7 @@ report). This gives DP/FSDP/TP/EP/SP from one table:
 from __future__ import annotations
 
 import threading
+import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 
@@ -27,7 +28,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "DEFAULT_RULES",
     "MeshContext",
+    "ReplicatedDimWarning",
     "use_mesh",
+    "suspend_mesh",
     "current_ctx",
     "spec_for",
     "sharding_for",
@@ -38,6 +41,16 @@ __all__ = [
     "tree_axes",
     "tree_sharding",
 ]
+
+
+class ReplicatedDimWarning(UserWarning):
+    """A logical dim did not divide its mesh axis and was replicated.
+
+    Silently replicating is *correct* but can be a large silent perf cliff
+    (e.g. 40 heads on a 16-way model axis keeps every head on every chip):
+    the warning fires once per distinct (logical axis, dim, mesh axis) per
+    :class:`MeshContext`, and the context's ``replicated_dims`` counter keeps
+    the running total for health/roofline reporting."""
 
 # logical axis -> mesh axis (str), tuple of mesh axes, or None (replicate)
 DEFAULT_RULES: dict[str, object] = {
@@ -79,6 +92,32 @@ class MeshContext:
     mesh: Mesh
     rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
     dropped: list = field(default_factory=list)  # (axes, dim, axis) divisibility drops
+    # divisibility-replication accounting (satellite fix: a dim that does not
+    # divide its mesh axis is replicated *loudly* — one structured warning per
+    # distinct site, and a counter consumers surface in Scheduler.health())
+    replicated_dims: int = 0
+    _warned: set = field(default_factory=set)
+    # rules whose mesh axes were absent from this mesh at use_mesh() time:
+    # {logical axis: original mesh axis spec} (satellite fix: a "pod"-axis
+    # rule on a pod-less mesh is reported by launch/dryrun.py, not vanished)
+    dropped_rules: dict = field(default_factory=dict)
+
+    def note_replicated(self, name, dim: int, mesh_ax) -> None:
+        """Record one divisibility drop; warn the first time this exact
+        (logical axis, dim, mesh axis) combination replicates under this
+        context."""
+        self.dropped.append((name, dim, mesh_ax))
+        self.replicated_dims += 1
+        key = (name, int(dim), mesh_ax)
+        if key not in self._warned:
+            self._warned.add(key)
+            warnings.warn(
+                f"sharding: logical axis {name!r} (dim {dim}) does not divide "
+                f"mesh axis {mesh_ax!r} (size {self.axis_size(mesh_ax)}) — "
+                f"replicating (MeshContext.replicated_dims={self.replicated_dims})",
+                ReplicatedDimWarning,
+                stacklevel=3,
+            )
 
     def axis_size(self, axis) -> int:
         if axis is None:
@@ -100,21 +139,48 @@ def use_mesh(mesh: Mesh, rules: dict | None = None, overrides: dict | None = Non
         r.update(rules)
     if overrides:
         r.update(overrides)
-    # drop rules that reference axes absent from this mesh (e.g. "pod")
-    def _filter(ax):
+    # drop rules that reference axes absent from this mesh (e.g. "pod") —
+    # recording what was dropped so it shows up in dryrun/health output
+    # instead of vanishing (a rule silently ignored reads as "sharded" to
+    # anyone who only checks the rules table they passed in)
+    dropped_rules: dict = {}
+
+    def _filter(k, ax):
         if ax is None:
             return None
         if isinstance(ax, tuple):
             kept = tuple(a for a in ax if a in mesh.shape)
+            if kept != ax:
+                dropped_rules[k] = ax
             return kept or None
-        return ax if ax in mesh.shape else None
+        if ax not in mesh.shape:
+            dropped_rules[k] = ax
+            return None
+        return ax
 
-    r = {k: _filter(v) for k, v in r.items()}
+    r = {k: _filter(k, v) for k, v in r.items()}
     prev = getattr(_local, "ctx", None)
-    _local.ctx = MeshContext(mesh=mesh, rules=r)
+    _local.ctx = MeshContext(mesh=mesh, rules=r, dropped_rules=dropped_rules)
     try:
         with mesh:
             yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+@contextmanager
+def suspend_mesh():
+    """Temporarily deactivate the MeshContext (restored on exit).
+
+    The serve-mesh step (parallel/serve_mesh.py) traces the model body
+    *inside* ``jax.shard_map``, where per-device values have local shapes and
+    ``with_sharding_constraint`` is illegal — under this context
+    :func:`constrain` becomes a no-op and :func:`spec_for` falls back to
+    fully-replicated specs, so unmodified model code traces cleanly."""
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = None
+    try:
+        yield
     finally:
         _local.ctx = prev
 
@@ -142,7 +208,7 @@ def spec_for(axes: tuple, shape: tuple | None = None) -> P:
         if shape is not None:
             size = ctx.axis_size(mesh_ax)
             if shape[i] % size != 0:
-                ctx.dropped.append((name, shape[i], mesh_ax))
+                ctx.note_replicated(name, shape[i], mesh_ax)
                 out.append(None)
                 continue
         out.append(mesh_ax)

@@ -44,14 +44,18 @@ from ..core.tugemm import TuGemmStats
 
 __all__ = [
     "CapturedGemm",
+    "CapturedScalar",
     "Capture",
     "capture_stats",
     "capturing",
+    "stats_wanted",
     "push",
+    "push_scalar",
     "frame",
     "as_tree",
     "deposit",
     "tree_entries",
+    "tree_scalars",
     "tree_totals",
     "tree_totals_by_bits",
 ]
@@ -87,12 +91,42 @@ jax.tree_util.register_pytree_node(
 )
 
 
-class Capture:
-    """Active capture: a frame stack (trace-time) + the assembled tree."""
+@dataclass
+class CapturedScalar:
+    """One named traced scalar riding the capture tree (e.g. the MoE router's
+    per-layer dropped-token count). Travels through ``lax.scan`` / checkpoint
+    exactly like :class:`CapturedGemm` — the aggregation helpers
+    (``tree_totals*``) skip it; :func:`tree_scalars` collects it."""
 
-    def __init__(self) -> None:
-        self.frames: list[list[CapturedGemm]] = [[]]
+    name: str
+    value: jax.Array
+
+    def tree_flatten(self):
+        return (self.value,), (self.name,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], children[0])
+
+
+jax.tree_util.register_pytree_node(
+    CapturedScalar, CapturedScalar.tree_flatten, CapturedScalar.tree_unflatten
+)
+
+
+class Capture:
+    """Active capture: a frame stack (trace-time) + the assembled tree.
+
+    ``scalars_only=True`` keeps the frame machinery live (so
+    :class:`CapturedScalar` entries still thread through scan boundaries) but
+    tells the GEMM layer not to compute TuGemmStats — the mesh-serving step
+    uses this to count MoE token drops on every tick without paying for full
+    cycle statistics when energy tracking is off."""
+
+    def __init__(self, scalars_only: bool = False) -> None:
+        self.frames: list[list] = [[]]
         self.tree: dict = {}
+        self.scalars_only = scalars_only
 
 
 _ACTIVE: list[Capture] = []
@@ -102,12 +136,24 @@ def capturing() -> bool:
     return bool(_ACTIVE)
 
 
+def stats_wanted() -> bool:
+    """True when an active capture wants full per-GEMM TuGemmStats (as
+    opposed to a scalars-only capture that just threads counters)."""
+    return bool(_ACTIVE) and not _ACTIVE[-1].scalars_only
+
+
 def push(name: str, M: int, K: int, N: int, stats: TuGemmStats, bits: int = 8) -> None:
     """Record one GEMM in the innermost frame (no-op when not capturing)."""
     if _ACTIVE:
         _ACTIVE[-1].frames[-1].append(
             CapturedGemm(name, int(M), int(K), int(N), stats, int(bits))
         )
+
+
+def push_scalar(name: str, value) -> None:
+    """Record one named traced scalar in the innermost frame."""
+    if _ACTIVE:
+        _ACTIVE[-1].frames[-1].append(CapturedScalar(name, value))
 
 
 @contextmanager
@@ -149,11 +195,11 @@ def deposit(key: str, subtree) -> None:
 
 
 @contextmanager
-def capture_stats():
+def capture_stats(scalars_only: bool = False):
     """Enable stats capture; yields the :class:`Capture` whose ``.tree``
     holds the result after the block exits. Top-level GEMMs (embedding
     frontend, LM head) drain from the root frame into the tree by name."""
-    cap = Capture()
+    cap = Capture(scalars_only=scalars_only)
     _ACTIVE.append(cap)
     try:
         yield cap
@@ -173,6 +219,8 @@ def tree_entries(tree, prefix: str = "") -> list[tuple[str, CapturedGemm]]:
         return out
     if isinstance(tree, CapturedGemm):
         return [(prefix or tree.name, tree)]
+    if isinstance(tree, CapturedScalar):
+        return out  # counters, not GEMMs — see tree_scalars
     if isinstance(tree, dict):
         items = tree.items()
     elif isinstance(tree, (list, tuple)):
@@ -182,6 +230,26 @@ def tree_entries(tree, prefix: str = "") -> list[tuple[str, CapturedGemm]]:
     for k, v in items:
         label = f"{prefix}/{k}" if prefix else str(k)
         out.extend(tree_entries(v, label))
+    return out
+
+
+def tree_scalars(tree, prefix: str = "") -> list[tuple[str, CapturedScalar]]:
+    """Flatten a stats tree into its labelled :class:`CapturedScalar` entries
+    (the mirror of :func:`tree_entries` for non-GEMM counters)."""
+    out: list[tuple[str, CapturedScalar]] = []
+    if tree is None or isinstance(tree, CapturedGemm):
+        return out
+    if isinstance(tree, CapturedScalar):
+        return [(prefix or tree.name, tree)]
+    if isinstance(tree, dict):
+        items = tree.items()
+    elif isinstance(tree, (list, tuple)):
+        items = enumerate(tree)
+    else:
+        return out
+    for k, v in items:
+        label = f"{prefix}/{k}" if prefix else str(k)
+        out.extend(tree_scalars(v, label))
     return out
 
 

@@ -44,7 +44,7 @@ from ..core.encoding import int_range
 from ..kernels import ops
 from ..kernels.ref import dequant_bias_ref
 from . import capture
-from .quantize import compute_scale, fused_scales, quantize
+from .quantize import amax_to_scale, compute_scale, fused_scales, quantize, raw_amax
 from .stats import record_stats
 
 __all__ = ["GemmBackend", "BF16", "QBits", "gemm", "dense", "prequantize_tree"]
@@ -134,8 +134,9 @@ def _flatten(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
 def _want_stats(backend: GemmBackend, return_stats: bool) -> bool:
     """Stats come out of the pass when anyone wants them: the debug-callback
     collector (backend.collect_stats), the functional caller (return_stats),
-    or an active capture (quant.capture / surgery stats tree)."""
-    return backend.collect_stats or return_stats or capture.capturing()
+    or an active capture that wants GEMM stats (a scalars-only capture keeps
+    frames open for counters but skips the TuGemmStats computation)."""
+    return backend.collect_stats or return_stats or capture.stats_wanted()
 
 
 def _sink_stats(stats, x2, N, backend: GemmBackend, name: str, return_stats: bool):
@@ -155,14 +156,14 @@ def _sink_stats(stats, x2, N, backend: GemmBackend, name: str, return_stats: boo
 
 def _emit_fused(
     x2, w, sx, sw, bias, backend: GemmBackend, name: str, *,
-    w_quantized: bool, return_stats: bool = False,
+    w_quantized: bool, return_stats: bool = False, out_dtype=None,
 ):
     """Single fused dispatch + stats routing; returns (y 2-D, stats|None)."""
     want = _want_stats(backend, return_stats)
     out = ops.matmul_fused(
         x2, w, sx=sx, sw=sw, bias=bias,
         bits=backend.bits, w_quantized=w_quantized,
-        collect_stats=want, impl=backend.impl,
+        collect_stats=want, impl=backend.impl, out_dtype=out_dtype,
     )
     if not want:
         return out, None
@@ -196,7 +197,15 @@ def gemm(
     ``(y, TuGemmStats | None)`` instead — the functional form (None on the
     bf16 path, which runs no tuGEMM hardware)."""
     backend = backend.for_gemm(name)
+    from ..parallel import collectives as dist  # trace-time only; no cycle
+
+    prog = dist.current_program()
+    gathered = prog is not None and name in prog.gather_gemms
     if backend.kind == "bf16":
+        if gathered:
+            # bf16 GEMMs whose input features are tp-sharded still need the
+            # gather — just at full precision (the metered baseline)
+            x = prog.gather_features_f(x, name)
         y = _bf16_gemm(x, w, bias)
         return (y, None) if return_stats else y
 
@@ -214,6 +223,20 @@ def gemm(
         sx = jnp.asarray(scales[name] / (int_range(bits)[1]), jnp.float32)
         sw = compute_scale(w, bits, axis=1)
         ops.count_dispatch("scale_w")
+    elif prog is not None:
+        # mesh: the activation scale must be the *global* amax — per-token
+        # rows are dp-local (sync over tp only when features are sharded);
+        # per-tensor sees all rows and all features. pmax of amaxes is exact,
+        # so the synced scale is bit-identical to the single-device one.
+        amax = raw_amax(x2, axis=0 if per_token else None)
+        if gathered:
+            amax = prog.sync_amax_tp(amax, name)
+        if not per_token:
+            amax = prog.sync_amax_dp(amax, name)
+        sx = amax_to_scale(amax, bits)
+        sw = compute_scale(w, bits, axis=1)
+        ops.count_dispatch("scale_x")
+        ops.count_dispatch("scale_w")
     elif backend.fused:
         sx, sw = fused_scales(x2, w, bits, per_token)  # dynamic scales, 1 dispatch
         ops.count_dispatch("fused_scales")
@@ -222,6 +245,29 @@ def gemm(
         sw = compute_scale(w, bits, axis=1)
         ops.count_dispatch("scale_x")
         ops.count_dispatch("scale_w")
+
+    if gathered:
+        # quantize-before-all-gather (the tentpole): quantize the local
+        # feature chunk, put the int planes (bit-packed when sub-byte) on
+        # the wire, run the integer GEMM on the gathered full-K plane.
+        # Bit-exact vs the single-device fused path: the scale is the global
+        # one (synced above), the gathered plane equals the single-device
+        # quantization of the full row, and the unfused integer composition
+        # is bit-exact against matmul_fused (tests/test_fused.py).
+        xq = quantize(x2, sx.reshape(-1, 1) if per_token else sx, bits)
+        wq = quantize(w, sw.reshape(1, -1), bits)
+        ops.count_dispatch("quantize_x")
+        ops.count_dispatch("quantize_w")
+        xq = prog.gather_features_quant(xq, bits, name)
+        y_int = ops.matmul_int8(xq, wq, impl=backend.impl)
+        stats = None
+        if _want_stats(backend, return_stats):
+            stats = ops.unary_step_stats(xq, wq, impl=backend.impl)
+            _sink_stats(stats, xq, w.shape[1], backend, name, return_stats)
+        y = dequant_bias_ref(y_int, sx, sw, bias, out_dtype=jnp.dtype(x.dtype).name)
+        ops.count_dispatch("dequant_epilogue")
+        y = y.reshape(*lead, w.shape[1])
+        return (y, stats) if return_stats else y
 
     if backend.fused:
         y, stats = _emit_fused(
@@ -280,10 +326,41 @@ def _gemm_prequant(
     bits = backend.bits
     per_token = backend.act_scale == "token"
     x2, lead = _flatten(x)
-    sx = compute_scale(x2, bits, axis=0 if per_token else None)
+    from ..parallel import collectives as dist
+
+    prog = dist.current_program()
+    gathered = prog is not None and name in prog.gather_gemms
+    if prog is not None:
+        amax = raw_amax(x2, axis=0 if per_token else None)
+        if gathered:
+            amax = prog.sync_amax_tp(amax, name)
+        if not per_token:
+            amax = prog.sync_amax_dp(amax, name)
+        sx = amax_to_scale(amax, bits)
+    else:
+        sx = compute_scale(x2, bits, axis=0 if per_token else None)
     ops.count_dispatch("scale_x")
     sw = leaf["qscale"]
     N = sw.shape[0]
+
+    if gathered:
+        # quantize-before-all-gather into the fused packed-weight kernel:
+        # quantize the local chunk, gather the int planes, then hand the
+        # kernel the *dequantized* full-K plane (f32) with the same scale —
+        # round(q·s / s) == q exactly in f32 for |q| ≤ 127, so the kernel's
+        # on-load quantization reproduces the gathered plane bit-for-bit and
+        # its cycle stats are the true full-K statistics.
+        xq = quantize(x2, sx.reshape(-1, 1) if per_token else sx, bits)
+        ops.count_dispatch("quantize_x")
+        xq = prog.gather_features_quant(xq, bits, name)
+        xdq = xq.astype(jnp.float32) * (sx.reshape(-1, 1) if per_token else sx)
+        y, stats = _emit_fused(
+            xdq, leaf["qkernel"], sx, sw, bias, backend, name,
+            w_quantized=True, return_stats=return_stats,
+            out_dtype=jnp.dtype(x.dtype).name,
+        )
+        y = y.reshape(*lead, N)
+        return (y, stats) if return_stats else y
 
     if backend.fused:
         # fused path: plane decode happens inside the same kernel, and —

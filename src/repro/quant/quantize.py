@@ -19,6 +19,8 @@ from ..core.encoding import int_range
 __all__ = [
     "QuantConfig",
     "compute_scale",
+    "raw_amax",
+    "amax_to_scale",
     "fused_scales",
     "quantize",
     "dequantize",
@@ -46,7 +48,6 @@ def compute_scale(
     axis=None → per-tensor scalar scale; axis=k → per-slice scale along k
     (shape keeps dim k, size 1 elsewhere reduced).
     """
-    _, hi = int_range(bits)
     absx = jnp.abs(x.astype(jnp.float32))
     if percentile >= 100.0:
         amax = absx.max() if axis is None else absx.max(
@@ -59,11 +60,31 @@ def compute_scale(
         else:
             moved = jnp.moveaxis(absx, axis, 0).reshape(x.shape[axis], -1)
             amax = jnp.quantile(moved, q, axis=1)
-    # multiply by the precomputed reciprocal rather than divide: eager and
-    # jitted (fused_scales) invocations of this function must produce
-    # bit-identical scales, and that only holds when both run the identical
-    # op — jitted `amax / hi` was observed to compile to a reciprocal
-    # multiply (1-ulp different for hi=127/7), so pin the multiply form here
+    return amax_to_scale(amax, bits)
+
+
+def raw_amax(x: jnp.ndarray, *, axis: int | None = None) -> jnp.ndarray:
+    """The absmax reduction of :func:`compute_scale`, without the scale
+    transform. Exposed separately so distributed callers can max-merge local
+    amaxes across mesh axes (max is exact — the merged value is bit-identical
+    to the single-device global reduction) before applying the transform."""
+    absx = jnp.abs(x.astype(jnp.float32))
+    if axis is None:
+        return absx.max()
+    return absx.max(axis=tuple(i for i in range(x.ndim) if i != axis))
+
+
+def amax_to_scale(amax: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """amax → symmetric scale. The one true transform: every scale in the
+    repo (eager, jitted, collective-synced) must flow through this exact op
+    sequence for bit-identical quantization everywhere.
+
+    Multiply by the precomputed reciprocal rather than divide: eager and
+    jitted (fused_scales) invocations must produce bit-identical scales, and
+    that only holds when both run the identical op — jitted ``amax / hi`` was
+    observed to compile to a reciprocal multiply (1-ulp different for
+    hi=127/7), so pin the multiply form here."""
+    _, hi = int_range(bits)
     return jnp.maximum(amax, 1e-8) * (1.0 / hi)
 
 

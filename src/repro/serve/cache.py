@@ -479,6 +479,22 @@ class BlockManager:
         pages = [int(self.tables[slot, b]) for b in range(nblocks)]
         return self.prefix.register(seq, nblocks, pages, now=now)
 
+    def table_shard(self, rank: int, tp: int) -> np.ndarray:
+        """Per-device view of the block tables for ownership accounting on a
+        tp-way mesh: group ``rank`` owns page ``p`` iff ``p % tp == rank``
+        (the trash page belongs to everyone). Entries this group does not
+        own are masked to trash, so the ``tp`` shards *partition* the global
+        table — every live entry appears in exactly one shard (the
+        property-tested invariant; the shard bench uses the shard sizes as
+        its page-balance signal). Note the KV *data* is head-group sharded
+        (every device holds a head slice of every page) — this is the
+        ownership partition for attribution, not a data layout."""
+        if not (0 <= rank < tp):
+            raise ValueError(f"rank {rank} out of range for tp={tp}")
+        t = self.tables.copy()
+        t[(t != self.trash) & (t % tp != rank)] = self.trash
+        return t
+
     def drain_cow_copies(self) -> list[tuple[int, int]]:
         """Hand the pending (src, dst) page copies to the caller (the
         scheduler performs them on every device pool sharing these tables

@@ -55,6 +55,7 @@ from ..configs.base import ModelConfig, RunConfig
 from ..core.report import slot_energy
 from ..models import KVView, forward, init_caches, lm_logits
 from ..models.transformer import plan_groups
+from ..parallel.sharding import current_ctx as sharding_ctx
 from ..quant import capture as stats_capture
 from ..quant.capture import tree_totals_by_bits
 from .admission import (
@@ -396,6 +397,7 @@ class Scheduler:
         draft_params: dict | None = None,
         admission: AdmissionController | None = None,
         faults=None,
+        mesh=None,
     ):
         for g in plan_groups(cfg):
             for kind in g.kinds:
@@ -434,9 +436,41 @@ class Scheduler:
             self.mgr = None
             self.caches = init_caches(cfg, rc, max_batch, capacity)
 
-        self._step = jax.jit(
-            build_mixed_step(cfg, rc, with_stats=track_energy), donate_argnums=(1,)
-        )
+        # sharded serving (parallel/serve_mesh.py, DESIGN.md §12): the same
+        # mixed step shard_map-ped over a (dp, tp) mesh. The planner,
+        # BlockManager and every host loop below stay device-agnostic — the
+        # mesh only changes where the step's arrays live and how the stats
+        # tree is merged. The allocator is deliberately NOT sharded: one
+        # authoritative host-global page table, uploaded version-keyed.
+        self.mesh = None
+        self._mesh_step = None
+        self._fb_handle = None
+        self._shard_ctx = sharding_ctx()    # for health(): dropped rules etc.
+        self.moe_dropped_tokens = 0         # router capacity drops (never silent)
+        self.comms: dict = {}               # (label, bits) -> byte totals
+        self.cycles_by_bits: dict = {}      # bits -> exact int cycle totals
+        self._device_weight: dict = {}      # bits -> (dp, tp) int64 serial load
+        if mesh is not None:
+            from ..parallel import serve_mesh as _sm
+
+            if getattr(rc, "spec_gamma", 0) > 0:
+                raise NotImplementedError(
+                    "speculative decoding on a mesh is not supported yet — "
+                    "the draft pool fork/rollback protocol is single-device"
+                )
+            self.mesh = _sm.as_spec(mesh)
+            _sm.validate(cfg, rc, self.mesh, max_batch)
+            self.params = _sm.shard_params(self.mesh, self.params)
+            self.caches = _sm.shard_caches(self.mesh, rc, self.caches)
+            self._mesh_step = _sm.build_sharded_step(
+                cfg, rc, self.mesh, self.params, self.caches,
+                with_stats=track_energy,
+            )
+            self._step = self._mesh_step
+        else:
+            self._step = jax.jit(
+                build_mixed_step(cfg, rc, with_stats=track_energy), donate_argnums=(1,)
+            )
         # speculative decoding: a draft-policy model view + draft KV pool
         # (serve.spec.SpecDecoder) and a verify-shaped target step that keeps
         # every chunk column's logits. All spec-mode ticks route through
@@ -924,11 +958,29 @@ class Scheduler:
                 jnp.asarray(tokens[:, :width]), jnp.asarray(pos),
                 jnp.asarray(lens_main), tables,
             )
-            if self.track_energy:
+            if self.mesh is not None:
+                # sharded step always returns the 3-tuple: the raw stats
+                # tree carries per-device leading (dp, tp) axes plus the MoE
+                # drop counters even when energy tracking is off
+                self.caches, logits, raw = out
+                raw_np = jax.tree.map(np.asarray, raw)
+                self.moe_dropped_tokens += self._mesh_step.moe_drops(raw_np)
+                self._accum_comms(self._mesh_step.comms_for(width))
+                if self.track_energy:
+                    tree = self._mesh_step.merge_stats(raw_np)
+                    step_by_bits = tree_totals_by_bits(tree)
+                    self._accum_device_load(
+                        self._mesh_step.device_serial_by_bits(raw_np))
+            elif self.track_energy:
                 self.caches, logits, tree = out
                 step_by_bits = tree_totals_by_bits(tree)
             else:
                 self.caches, logits = out
+            for b, d in step_by_bits.items():
+                acc = self.cycles_by_bits.setdefault(
+                    b, {"serial_cycles": 0, "parallel_cycles": 0})
+                for k2, v2 in d.items():
+                    acc[k2] += int(v2)
             main_np = np.array(logits, np.float32)   # writable copy
             if logits_np is None:
                 logits_np = main_np
@@ -1031,7 +1083,16 @@ class Scheduler:
                     spec_gamma=0, draft_policy=None,
                 )
                 # no donation: a failing first call must not invalidate caches
-                self._fb_step = jax.jit(build_mixed_step(self.cfg, rc_fb))
+                if self.mesh is not None:
+                    from ..parallel import serve_mesh as _sm
+
+                    self._fb_handle = _sm.build_sharded_step(
+                        self.cfg, rc_fb, self.mesh, self.params, self.caches,
+                        with_stats=False, donate=False,
+                    )
+                    self._fb_step = lambda *a: self._fb_handle(*a)[:2]
+                else:
+                    self._fb_step = jax.jit(build_mixed_step(self.cfg, rc_fb))
             lens_fb = np.zeros_like(lens)
             for i in fb_rows:
                 lens_fb[i] = lens[i]
@@ -1400,6 +1461,21 @@ class Scheduler:
             } if (mgr is not None and mgr.prefix is not None)
                 else {"enabled": False,
                       "prefill_tokens_computed": self.prefill_tokens_computed}),
+            # sharding context accounting (satellite fixes): divisibility
+            # replications are warned once + counted; rules whose mesh axes
+            # were absent at use_mesh() time are reported, never vanished
+            "sharding": ({
+                "replicated_dims": self._shard_ctx.replicated_dims,
+                "dropped_rules": dict(self._shard_ctx.dropped_rules),
+            } if self._shard_ctx is not None else {"replicated_dims": 0,
+                                                   "dropped_rules": {}}),
+            "mesh": ({
+                "dp": self.mesh.dp,
+                "tp": self.mesh.tp,
+                "devices": self.mesh.devices,
+                "moe_dropped_tokens": self.moe_dropped_tokens,
+                "comms": self.comms_summary(),
+            } if self.mesh is not None else {"enabled": False}),
             "stalled_rows_total": self.stalled_rows_total,
             "stall_episodes": self.stall_episodes,
             "engine_stalls": self.engine_stalls,
@@ -1409,6 +1485,59 @@ class Scheduler:
             "draft_stale_events": self.draft_stale_events,
             "draft_resyncs": self.draft_resyncs,
         }
+
+    # ---------------------------------------------------------------- mesh
+    def _accum_comms(self, snap: dict) -> None:
+        """Fold one step's trace-time collective meter into running totals.
+
+        The snapshot is static per compiled step width, so per-tick totals
+        are exact — every tick at width W moved exactly the bytes the trace
+        at width W recorded."""
+        for key, r in snap.items():
+            acc = self.comms.setdefault(key, {k: 0 for k in r})
+            for k, v in r.items():
+                acc[k] += v
+
+    def _accum_device_load(self, dev: dict) -> None:
+        for bits, m in dev.items():
+            acc = self._device_weight.get(bits)
+            self._device_weight[bits] = m if acc is None else acc + m
+
+    def comms_summary(self) -> dict:
+        """Interconnect rollup: {bits: {payload_bytes, bf16_bytes, elems,
+        calls}} over all quantized-gather/amax-sync collectives so far, plus
+        the grand totals core.report prices as interconnect energy."""
+        by_bits: dict = {}
+        for (_, bits), r in self.comms.items():
+            acc = by_bits.setdefault(
+                int(bits),
+                {"calls": 0, "elems": 0, "payload_bytes": 0,
+                 "scale_bytes": 0, "bf16_bytes": 0},
+            )
+            for k, v in r.items():
+                acc[k] += v
+        total = sum(r["payload_bytes"] + r["scale_bytes"] for r in by_bits.values())
+        bf16 = sum(r["bf16_bytes"] for r in by_bits.values())
+        return {"by_bits": by_bits, "bytes_moved": total, "bf16_bytes": bf16}
+
+    def device_attribution(self) -> dict:
+        """Per-device share of the engine's cycle totals: {bits: (dp, tp)
+        int64}, split proportionally to each device's own executed serial
+        cycles and summing *exactly* to ``cycles_by_bits`` (the same totals
+        a single-device run books into its SlotMeters — the PR's
+        attribution gate). Requires mesh + track_energy."""
+        if self.mesh is None:
+            raise ValueError("device_attribution() needs a mesh scheduler")
+        from ..parallel.serve_mesh import ShardedStep
+
+        out = {}
+        for bits, acc in self.cycles_by_bits.items():
+            w = self._device_weight.get(bits)
+            if w is None:
+                w = np.ones((self.mesh.dp, self.mesh.tp), np.int64)
+            shares = ShardedStep.split_exact(acc["serial_cycles"], w.reshape(-1))
+            out[bits] = shares.reshape(self.mesh.dp, self.mesh.tp)
+        return out
 
     # -------------------------------------------------------------- energy
     def energy_summary(self, variant: str = "serial") -> list[dict]:
