@@ -1,27 +1,40 @@
 """Kernel micro-benchmark: exactness sweep + fused-vs-unfused pipeline A/B
-+ end-to-end quantized-vs-fp32 decode-step A/B.
++ roofline-fraction gate + end-to-end quantized-vs-fp32 decode-step A/B.
 
-Three sections:
+Sections:
 
 1. **Exactness sweep** — for each kernel (int8 GEMM, packed int4/int2 GEMM,
-   thermometer-decomposed temporal GEMM, fused pipeline) checks bit-exactness
-   of the Pallas body (interpret mode) and the XLA path against the jnp
-   oracle, then times the XLA path (what CPU users run; TPU would run the
-   compiled Pallas kernels, which cannot be timed here).
+   thermometer-decomposed temporal GEMM, fused pipeline at per-tensor AND
+   per-token activation scales) checks bit-exactness of the Pallas body
+   (interpret mode) and the XLA path against the jnp oracle, then times the
+   XLA path (what CPU users run; TPU would run the compiled Pallas kernels,
+   which cannot be timed here).
 2. **Pipeline A/B** — times the complete dynamic-quant linear layer through
    qlinear.gemm with ``fused=True`` vs ``fused=False`` on the XLA path and
    counts device dispatches for both (DESIGN.md §4's ≥6 → 2 claim, measured).
-3. **E2E decode A/B** — a full continuous-batching decode step on the smoke
+3. **Roofline gate** — compiles the two serving hot-path kernels (fused
+   per-token tuGEMM, paged flash-decode attention — on CPU the XLA twins
+   those paths actually run), prices their optimized-HLO byte traffic under
+   the running backend's HW profile, and reports achieved fraction of the
+   memory-bound roofline. Below-floor fractions **hard-fail on accelerator
+   backends** (tpu/gpu) and are report-only on CPU (DESIGN.md §13).
+4. **E2E decode A/B** — a full continuous-batching decode step on the smoke
    model: fp32 vs surgered int8/int4 (dynamic + prequant), logits
    correlation vs fp32, plus the per-step tuGEMM cycle totals and modeled
    energy from the stats-enabled path (DESIGN.md §6).
-4. **Mixed-policy A/B** — uniform int8 vs the mixed QuantPolicy deployment
+5. **Mixed-policy A/B** — uniform int8 vs the mixed QuantPolicy deployment
    (attn int8 / mlp int2 / rest bf16, DESIGN.md §7): per-bits cycle split
    and modeled energy on the same decode step.
 
-Writes ``benchmarks/BENCH_kernels.json``, ``benchmarks/BENCH_e2e.json`` and
-``benchmarks/BENCH_policy.json`` so the perf trajectory is tracked across
-PRs. Usage: ``PYTHONPATH=src python benchmarks/kernel_bench.py [--fast]``.
+``benchmarks/BENCH_kernels.json`` is a **per-backend keyed trajectory**
+(schema 2): ``{"schema": 2, "backends": {backend: latest-entry},
+"history": [compact per-emit rows with backend + git rev]}`` — so a CPU
+refresh never clobbers the TPU numbers and a regression is visible the PR
+it lands. v1 (flat single-snapshot) files migrate on first write.
+``BENCH_e2e.json`` / ``BENCH_policy.json`` use the same store. ``--fast``
+never writes the committed files but asserts the schema round-trips and
+history appends in-memory. Usage: ``PYTHONPATH=src python
+benchmarks/kernel_bench.py [--fast]``.
 """
 
 from __future__ import annotations
@@ -29,6 +42,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import subprocess
 import time
 
 import jax
@@ -42,6 +56,90 @@ from repro.quant import GemmBackend, effective_policy, gemm, tree_totals_by_bits
 _OUT = pathlib.Path(__file__).resolve().parent / "BENCH_kernels.json"
 _OUT_E2E = pathlib.Path(__file__).resolve().parent / "BENCH_e2e.json"
 _OUT_POLICY = pathlib.Path(__file__).resolve().parent / "BENCH_policy.json"
+
+SCHEMA = 2
+_HISTORY_CAP = 100
+
+# declared floors: achieved fraction of the memory-bound roofline each
+# serving hot-path kernel must clear on an accelerator backend
+ROOFLINE_FLOORS = {"tugemm_fused_pertoken": 0.3, "flash_paged_decode": 0.3}
+
+
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _migrate(store: dict) -> dict:
+    """v1 (flat single-backend snapshot) -> v2 per-backend keyed store."""
+    if not isinstance(store, dict) or not store:
+        return {"schema": SCHEMA, "backends": {}, "history": []}
+    if store.get("schema") == SCHEMA:
+        store.setdefault("backends", {})
+        store.setdefault("history", [])
+        return store
+    return {"schema": SCHEMA,
+            "backends": {store.get("backend", "cpu"): store},
+            "history": []}
+
+
+def merge_entry(store: dict, backend: str, entry: dict, rev: str) -> dict:
+    """Set ``backends[backend]`` to the new entry and append a compact
+    history row (trajectory: backend, git rev, exactness, headline numbers).
+    Returns the migrated/updated store (mutated in place when already v2)."""
+    store = _migrate(store)
+    entry = dict(entry, git_rev=rev)
+    store["backends"][backend] = entry
+    row: dict = {"backend": backend, "git_rev": rev}
+    if "exact" in entry:
+        row["exact"] = entry["exact"]
+    if entry.get("timings"):
+        row["timings"] = entry["timings"]
+    if entry.get("pipeline"):
+        row["fused_speedup_min"] = min(
+            r["speedup"] for r in entry["pipeline"].values())
+    if entry.get("roofline"):
+        row["roofline_fraction"] = {
+            k: v["fraction"] for k, v in entry["roofline"].items()}
+    store["history"].append(row)
+    store["history"] = store["history"][-_HISTORY_CAP:]
+    return store
+
+
+def emit(path: pathlib.Path, backend: str, entry: dict) -> None:
+    """Merge one bench emit into a per-backend store file on disk."""
+    try:
+        store = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        store = {}
+    store = merge_entry(store, backend, entry, git_rev())
+    path.write_text(json.dumps(store, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path} (backends: {sorted(store['backends'])}, "
+          f"history: {len(store['history'])})")
+
+
+def check_store_roundtrip(backend: str, entry: dict) -> None:
+    """--fast invariant: the v2 schema JSON-round-trips, keys per backend,
+    appends history, and migrates a v1 snapshot — all in memory."""
+    s1 = merge_entry({}, backend, entry, "aaaaaaa")
+    s1 = json.loads(json.dumps(s1))                    # round-trip
+    s2 = merge_entry(s1, backend, entry, "bbbbbbb")
+    assert s2["schema"] == SCHEMA and backend in s2["backends"]
+    assert len(s2["history"]) == 2, s2["history"]
+    assert s2["history"][-1]["git_rev"] == "bbbbbbb"
+    other = merge_entry(s2, backend + "_other", entry, "ccccccc")
+    assert set(other["backends"]) == {backend, backend + "_other"}
+    v1 = {"backend": backend, "exact": True, "timings": {"t": 1.0}}
+    m = merge_entry(v1, backend, entry, "ddddddd")
+    assert m["schema"] == SCHEMA and len(m["history"]) == 1
+    print("[schema] per-backend store round-trips, appends history, "
+          "migrates v1: ok")
 
 
 def _rand_int8(key, shape, bits=8):
@@ -100,6 +198,25 @@ def bench_exactness(shapes, out):
         out["exact"] &= ok
         print(f"{f'temporal_gemm w{bits}':<18} {'32x16x32':<18} {'-':>8} {str(ok):>11} {'-':>14}")
 
+    # fused per-token-scale path (PR 9 kernel): interpret-Pallas vs XLA
+    # bit-exact through the full qlinear layer, and the Pallas path must
+    # record zero fallbacks — the downgrade this PR removed stays removed
+    ops.reset_kernel_counters()
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 1, (48, 96)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 64)), jnp.float32)
+    be_x = GemmBackend("int8", impl="xla", fused=True, act_scale="token")
+    be_p = GemmBackend("int8", impl="pallas_interpret", fused=True,
+                       act_scale="token")
+    y_x = gemm(x, w, backend=be_x, name="bench.pertoken")
+    y_p = gemm(x, w, backend=be_p, name="bench.pertoken")
+    ok = bool((np.asarray(y_x) == np.asarray(y_p)).all())
+    out["exact"] &= ok
+    fb = ops.kernel_counters()["fallbacks"].get("bench.pertoken", {})
+    assert not fb, f"per-token fused matmul fell back to XLA: {fb}"
+    print(f"{'fused per-token':<18} {'48x96x64':<18} {'-':>8} {str(ok):>11} "
+          f"{str(ok):>14}  (pallas fallbacks: 0)")
+
 
 def bench_fused_pipeline(shapes, out, iters=10):
     """A/B the full dynamic-quant linear layer: fused vs unfused, XLA path."""
@@ -145,6 +262,108 @@ def bench_fused_pipeline(shapes, out, iters=10):
     worst = min(r["speedup"] for r in results.values())
     dmax = max(r["dispatches_fused"] for r in results.values())
     print(f"\nfused pipeline: min speedup {worst:.2f}x, max dispatches {dmax}")
+
+
+def _measure_bound(jitted, args, hw, iters):
+    """(hlo_bytes, memory_bound_s, measured_s) for one compiled callable."""
+    from repro.roofline.hlo_parse import parse_hlo
+
+    compiled = jitted.lower(*args).compile()
+    nbytes = float(parse_hlo(compiled.as_text()).hbm_bytes)
+    jax.block_until_ready(jitted(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = jitted(*args)
+    jax.block_until_ready(r)
+    dt = (time.perf_counter() - t0) / iters
+    return nbytes, nbytes / hw.hbm_bw, dt
+
+
+def bench_roofline_gate(fast: bool, out: dict, iters: int = 10) -> None:
+    """Gate the two serving hot-path kernels against their memory-bound
+    roofline (DESIGN.md §13): price each compiled call's optimized-HLO byte
+    traffic under the running backend's HW profile and report
+
+        fraction = (HLO_bytes / hbm_bw) / measured_s
+
+    — the fraction of the memory-bound bound the kernel actually achieves.
+    Fractions below the declared ROOFLINE_FLOORS hard-fail on accelerator
+    backends; on CPU the numbers are report-only (CPU runs the XLA twins and
+    the cpu HW profile is a class estimate, not a calibration)."""
+    from repro.models.attention import KVView, _quantize_kv, kv_cache_read
+    from repro.models.flash import blockwise_attention, paged_decode_attention
+    from repro.roofline.analysis import hw_profile
+
+    backend = jax.default_backend()
+    hw = hw_profile("auto")
+    enforce = backend in ("tpu", "gpu")
+    rng = np.random.default_rng(0)
+    results: dict = {}
+
+    # fused per-token tuGEMM — the serving linear-layer hot path
+    M, K, N = (128, 512, 512) if fast else (512, 2048, 2048)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (K, N)), jnp.float32)
+    be = GemmBackend("int8", fused=True, act_scale="token")  # impl=auto
+    gemm_fn = jax.jit(
+        lambda x, w: gemm(x, w, backend=be, name="roofline.gemm"))
+    results["tugemm_fused_pertoken"] = _measure_bound(gemm_fn, (x, w), hw, iters)
+
+    # paged flash-decode — the serving attention hot path (int8 KV pool)
+    kv, group, hd, bs, MB, B = (2, 2, 32, 8, 4, 4) if fast else (4, 4, 64, 16, 8, 8)
+    P = B * MB
+    kq, ks = _quantize_kv(jnp.asarray(
+        rng.standard_normal((P + 1, bs, kv, hd)).astype(np.float32)))
+    vq, vs = _quantize_kv(jnp.asarray(
+        rng.standard_normal((P + 1, bs, kv, hd)).astype(np.float32)))
+    tables = jnp.arange(P, dtype=jnp.int32).reshape(B, MB)
+    pos = jnp.full((B,), MB * bs - 1, jnp.int32)   # full rows, decode step
+    lens = jnp.ones((B,), jnp.int32)
+    q = jnp.asarray(
+        rng.standard_normal((B, 1, kv * group, hd)).astype(np.float32))
+
+    def step(q, kq, ks, vq, vs, tables, pos, lens):
+        view = KVView(pos, lens, tables, block_size=bs, layout="paged")
+        cache = {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+        o = paged_decode_attention(q, cache, ("k",), "v", view,
+                                   kv_heads=kv, name="roofline.paged")
+        if o is None:  # CPU: the XLA twin is the path serving actually runs
+            kf = kv_cache_read(cache, "k", q.dtype, kv_len=view.kv_len, view=view)
+            vf = kv_cache_read(cache, "v", q.dtype, kv_len=view.kv_len, view=view)
+            o = blockwise_attention(q, kf, vf, q_offset=view.pos,
+                                    kv_len=view.kv_len, causal=True)
+        return o
+
+    results["flash_paged_decode"] = _measure_bound(
+        jax.jit(step), (q, kq, ks, vq, vs, tables, pos, lens), hw, iters)
+
+    print(f"\n{'roofline gate (' + hw.name + ' profile)':<34} {'HLO MB':>8} "
+          f"{'bound us':>9} {'meas us':>8} {'frac':>6} {'floor':>6} {'gate':>7}")
+    gate: dict = {}
+    failures = []
+    for name, (nbytes, bound_s, meas_s) in results.items():
+        frac = bound_s / meas_s if meas_s else 0.0
+        floor = ROOFLINE_FLOORS[name]
+        ok = frac >= floor
+        gate[name] = {
+            "hlo_bytes": nbytes,
+            "memory_bound_s": bound_s,
+            "measured_s": meas_s,
+            "fraction": frac,
+            "floor": floor,
+            "enforced": enforce,
+            "hw": hw.name,
+        }
+        verdict = ("pass" if ok else "FAIL") if enforce else "report"
+        print(f"{name:<34} {nbytes/1e6:>8.2f} {bound_s*1e6:>9.1f} "
+              f"{meas_s*1e6:>8.1f} {frac:>6.3f} {floor:>6.2f} {verdict:>7}")
+        if enforce and not ok:
+            failures.append(f"{name}: {frac:.3f} < floor {floor}")
+    out["roofline"] = gate
+    if failures:
+        raise RuntimeError(
+            "roofline gate failed on accelerator backend "
+            f"{backend}: {'; '.join(failures)}")
 
 
 def bench_e2e(fast: bool, write_json: bool) -> dict:
@@ -214,8 +433,7 @@ def bench_e2e(fast: bool, write_json: bool) -> dict:
         print(f"{name:<26} {dt*1e3:>9.2f} {corr:>13.4f} {extra}")
 
     if write_json:
-        _OUT_E2E.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
-        print(f"wrote {_OUT_E2E}")
+        emit(_OUT_E2E, out["backend"], out)
     return out
 
 
@@ -290,8 +508,7 @@ def bench_policy(fast: bool, write_json: bool) -> dict:
         out["mixed_energy_ratio"] = u["energy_j_16x16_serial"] / m["energy_j_16x16_serial"]
         print(f"mixed policy energy: {out['mixed_energy_ratio']:.2f}x less than uniform int8")
     if write_json:
-        _OUT_POLICY.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
-        print(f"wrote {_OUT_POLICY}")
+        emit(_OUT_POLICY, out["backend"], out)
     return out
 
 
@@ -311,10 +528,14 @@ def run(fast: bool = False, write_json: bool | None = None) -> dict:
     }
     bench_exactness(shapes, out)
     bench_fused_pipeline(shapes, out, iters=5 if fast else 10)
+    bench_roofline_gate(fast, out, iters=5 if fast else 10)
     print(f"\nall kernels bit-exact: {out['exact']}")
     if write_json:
-        _OUT.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
-        print(f"wrote {_OUT}")
+        emit(_OUT, out["backend"], out)
+    else:
+        # --fast must still prove the per-backend trajectory store works:
+        # schema round-trip, history append, v1 migration — in memory only
+        check_store_roundtrip(out["backend"], out)
     out["e2e"] = bench_e2e(fast, write_json)
     out["policy"] = bench_policy(fast, write_json)
     return out

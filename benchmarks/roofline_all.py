@@ -4,13 +4,26 @@ Reads ``experiments/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
 emits the §Roofline markdown table: per (arch × shape × mesh) the three terms
 in seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline
 fraction. Run the dry-run first; this benchmark only aggregates.
+
+``--hw {auto,cpu,gpu,tpu}`` re-prices every artifact under a named
+:data:`repro.roofline.analysis.HW_PROFILES` machine class: the artifacts
+carry the raw per-chip HLO FLOP/byte/collective counts, so the three terms
+(and the HBM fit check) are recomputed from counts ÷ profile rates rather
+than trusting the seconds baked in at dry-run time. Artifacts written before
+the raw counts were recorded fall back to their stored terms.
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.analysis import HW, hw_profile  # noqa: E402
 
 
 def rows(out_dir: str = "experiments/dryrun"):
@@ -19,17 +32,47 @@ def rows(out_dir: str = "experiments/dryrun"):
             yield json.load(fh)
 
 
-def run(fast: bool = False, out_dir: str = "experiments/dryrun") -> dict:
-    table = list(rows(out_dir))
+def reprice(d: dict, hw: HW) -> dict:
+    """Recompute the three terms from the artifact's raw per-chip counts.
+
+    Returns a shallow copy with compute_s/memory_s/collective_s/dominant/mfu
+    re-derived for ``hw``; artifacts lacking the raw counts are passed
+    through unchanged (their stored terms were priced at dry-run time)."""
+    if "hlo_flops_per_chip" not in d:
+        return d
+    out = dict(d)
+    out["compute_s"] = d["hlo_flops_per_chip"] / hw.peak_flops
+    out["memory_s"] = d["hlo_bytes_per_chip"] / hw.hbm_bw
+    out["collective_s"] = d.get("collective_bytes_per_chip", 0.0) / hw.ici_bw
+    terms = {
+        "compute": out["compute_s"],
+        "memory": out["memory_s"],
+        "collective": out["collective_s"],
+    }
+    out["dominant"] = max(terms, key=terms.get)
+    bound = max(terms.values())
+    chips = int(d.get("chips", 1)) or 1
+    denom = bound * chips * hw.peak_flops
+    out["mfu"] = d.get("model_flops", 0.0) / denom if denom else 0.0
+    return out
+
+
+def run(fast: bool = False, out_dir: str = "experiments/dryrun",
+        hw: str | HW | None = None) -> dict:
+    hw = hw if isinstance(hw, HW) else hw_profile(hw if hw else "tpu")
+    table = [reprice(d, hw) for d in rows(out_dir)]
     if not table:
         print("\n[roofline_all] no dry-run artifacts found; run "
               "`PYTHONPATH=src python -m repro.launch.dryrun --both-meshes` first")
-        return {"rows": 0}
-    print(f"\n{'cell':<52} {'mesh':>8} {'comp ms':>8} {'mem ms':>8} {'coll ms':>8} "
+        return {"rows": 0, "hw": hw.name}
+    print(f"\n[roofline_all] hw profile: {hw.name} "
+          f"({hw.peak_flops/1e12:.0f} TFLOP/s, {hw.hbm_bw/1e9:.0f} GB/s HBM, "
+          f"{hw.hbm_per_chip/1e9:.0f} GB/chip)")
+    print(f"{'cell':<52} {'mesh':>8} {'comp ms':>8} {'mem ms':>8} {'coll ms':>8} "
           f"{'dominant':>10} {'useful':>7} {'RL%':>6} {'GB/chip':>8} {'fits':>5}")
     n_fit = 0
     for d in sorted(table, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
-        fits = d["peak_bytes_per_chip"] <= 16e9
+        fits = d["peak_bytes_per_chip"] <= hw.hbm_per_chip
         n_fit += fits
         print(
             f"{d['arch'] + '×' + d['shape']:<52} {d['mesh']:>8} "
@@ -37,9 +80,15 @@ def run(fast: bool = False, out_dir: str = "experiments/dryrun") -> dict:
             f"{d['dominant']:>10} {d['useful_ratio']:>7.2f} {d['mfu']*100:>5.1f}% "
             f"{d['peak_bytes_per_chip']/1e9:>8.2f} {'y' if fits else 'N':>5}"
         )
-    print(f"\n{len(table)} cells, {n_fit} fit in 16 GB/chip")
-    return {"rows": len(table), "fit": n_fit}
+    print(f"\n{len(table)} cells, {n_fit} fit in {hw.hbm_per_chip/1e9:.0f} GB/chip")
+    return {"rows": len(table), "fit": n_fit, "hw": hw.name}
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--hw", default="tpu", choices=["auto", "cpu", "gpu", "tpu"],
+                    help="HW profile to price the terms under (auto = running "
+                         "JAX backend); default keeps the tpu assignment target")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    run(out_dir=args.out_dir, hw=args.hw)

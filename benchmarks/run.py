@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
+import subprocess
 import time
 import traceback
 
@@ -27,6 +29,26 @@ BENCHES = [
 ]
 
 
+def bench_meta() -> dict:
+    """Provenance stamped on every bench emit: the accelerator backend the
+    numbers were produced on and the git rev they measure. Without these a
+    trajectory file can't distinguish a regression from a machine change."""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:  # noqa: BLE001
+        backend = "unknown"
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001
+        rev = "unknown"
+    return {"backend": backend, "git_rev": rev}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -34,6 +56,8 @@ def main(argv=None) -> int:
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
+    meta = bench_meta()
+    print(f"[bench] backend={meta['backend']} git_rev={meta['git_rev']}")
     results, failures = {}, []
     for name in BENCHES:
         if args.only and name != args.only:
@@ -42,8 +66,12 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            results[name] = mod.run(fast=args.fast)
-            print(f"-- {name} done in {time.time()-t0:.1f}s")
+            res = mod.run(fast=args.fast)
+            if isinstance(res, dict):
+                res = dict(res, _meta=meta)
+            results[name] = res
+            print(f"-- {name} done in {time.time()-t0:.1f}s "
+                  f"[{meta['backend']}@{meta['git_rev']}]")
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             print(f"-- {name} FAILED: {e!r}")

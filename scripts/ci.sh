@@ -30,6 +30,17 @@ echo "== QuantPolicy suite (mixed precision + deprecation gate)"
 # tests assert the warning with pytest.warns).
 python -m pytest -x -q -p no:randomly tests/test_policy.py
 
+echo "== kernel smoke (Pallas interpret-mode bit-exactness + bench schema)"
+# the two serving hot-path kernels, interpret-mode on CPU: per-token fused
+# tuGEMM and paged flash-decode vs their XLA twins (greedy serve tokens AND
+# TuGemmStats), hypothesis split-K edge shapes, and the decode-step HLO
+# gather check. Then kernel_bench --fast, which asserts the per-backend
+# BENCH_kernels.json schema round-trips + appends history (in memory; fast
+# runs never write the committed artifacts) and runs the roofline gate
+# (report-only on CPU). Runs early: a broken kernel fails everything after.
+python -m pytest -x -q -p no:randomly tests/test_fused.py tests/test_flash_paged.py
+python benchmarks/kernel_bench.py --fast
+
 echo "== serve smoke (paged KV + chunked-prefill scheduler)"
 # the kv_layout A/B conformance + allocator property suite runs before the
 # monolithic pass so a broken page mapping fails fast (same determinism
@@ -79,10 +90,5 @@ echo "== tier-1 tests"
 # and must run identically everywhere. --durations surfaces creep in the
 # (deliberately slow) cycle-accurate golden-model tests.
 python -m pytest -x -q -p no:randomly --durations=10
-
-echo "== kernel bench (fast)"
-# fast runs never write BENCH_kernels.json / BENCH_e2e.json /
-# BENCH_policy.json (the committed artifacts are the full-shape runs)
-python benchmarks/kernel_bench.py --fast
 
 echo "ci: OK"

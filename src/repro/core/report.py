@@ -113,6 +113,11 @@ class EnergyReport:
     # INTERCONNECT_PJ_PER_BYTE — bits -> {bytes_moved, bf16_bytes, energy_j}
     interconnect: dict = field(default_factory=dict)
     interconnect_energy_j: float = 0.0
+    # trace-time Pallas-vs-XLA dispatch: {"paths": {name: {path: n}},
+    # "fallbacks": {name: {reason: n}}} (kernels.ops.kernel_counters) — the
+    # cycle model above assumes the fused kernels actually compiled; this
+    # records whether they did
+    kernels: dict = field(default_factory=dict)
 
     @property
     def is_mixed(self) -> bool:
@@ -158,6 +163,17 @@ class EnergyReport:
                 f"interconnect total: {self.interconnect_energy_j*1e6:.3f} uJ "
                 f"at {INTERCONNECT_PJ_PER_BYTE:.0f} pJ/B"
             )
+        paths = self.kernels.get("paths", {})
+        if paths:
+            by_path: dict[str, int] = {}
+            for counts in paths.values():
+                for p, n in counts.items():
+                    by_path[p] = by_path.get(p, 0) + n
+            frag = ", ".join(f"{p}={n}" for p, n in sorted(by_path.items()))
+            lines.append(f"kernel paths (traced): {frag}")
+            for gname, reasons in sorted(self.kernels.get("fallbacks", {}).items()):
+                why = ", ".join(f"{r}x{n}" for r, n in sorted(reasons.items()))
+                lines.append(f"  fallback {gname}: {why}")
         if self.baseline:
             b = self.baseline
             lines.append(
@@ -179,7 +195,8 @@ def _cycles(stats_field) -> int:
 
 
 def energy_report(
-    tree, *, bits: int | None = None, variant: str = "serial", comms: dict | None = None
+    tree, *, bits: int | None = None, variant: str = "serial",
+    comms: dict | None = None, kernels: dict | None = None,
 ) -> EnergyReport:
     """Roll a stats tree up into the per-request PPA/energy report.
 
@@ -190,12 +207,17 @@ def energy_report(
     ``comms`` is a sharded scheduler's ``comms_summary()`` (or any dict with
     a ``by_bits`` entry of ``{bits: {payload_bytes, scale_bytes,
     bf16_bytes}}``): the bytes each quantized collective moved become the
-    report's interconnect column at ``INTERCONNECT_PJ_PER_BYTE``."""
+    report's interconnect column at ``INTERCONNECT_PJ_PER_BYTE``.
+
+    ``kernels`` is a kernel-dispatch counter snapshot
+    (``Scheduler.health()["kernels"]`` / ``kernels.ops.kernel_counters``);
+    when present the render shows which backend each GEMM actually compiled
+    to and every recorded fallback reason."""
     from ..quant.capture import tree_entries  # local: core must not need quant
 
     if variant not in ("serial", "parallel"):
         raise ValueError(f"unknown tuGEMM variant {variant!r}")
-    rep = EnergyReport(bits=bits, variant=variant)
+    rep = EnergyReport(bits=bits, variant=variant, kernels=dict(kernels or {}))
     for label, e in tree_entries(tree):
         ebits = int(bits if bits is not None else e.bits)
         ser = _cycles(e.stats.serial_cycles)

@@ -40,6 +40,10 @@ __all__ = [
     "pack_weights",
     "count_dispatch",
     "counting_dispatches",
+    "record_path",
+    "record_fallback",
+    "kernel_counters",
+    "reset_kernel_counters",
 ]
 
 _PLANES = {8: 1, **BITS_TO_PLANES}
@@ -70,6 +74,45 @@ def counting_dispatches():
         yield _dispatch_log
     finally:
         _dispatch_log = prev
+
+
+# ------------------------------------------------- kernel path observability
+# Every named kernel call records which path it *traced* to (pallas vs xla),
+# and any silent downgrade from a requested pallas path records a fallback
+# with its reason. These are trace-time counters (jit cache hits do not
+# re-trace): they answer "which kernel did each GEMM name compile to", which
+# is exactly the question a silent ``path = "xla"`` downgrade used to hide
+# (the per-token-scale fallback this PR removed). Surfaced through
+# ``Scheduler.health()["kernels"]`` and ``core.report``.
+
+_kernel_paths: dict[str, dict[str, int]] = {}
+_kernel_fallbacks: dict[str, dict[str, int]] = {}
+
+
+def record_path(name: str, path: str) -> None:
+    """Record that the kernel call ``name`` traced to ``path`` (pallas|xla)."""
+    d = _kernel_paths.setdefault(name, {})
+    d[path] = d.get(path, 0) + 1
+
+
+def record_fallback(name: str, reason: str) -> None:
+    """Record a pallas→xla downgrade for ``name`` (also counts an xla path)."""
+    d = _kernel_fallbacks.setdefault(name, {})
+    d[reason] = d.get(reason, 0) + 1
+    record_path(name, "xla")
+
+
+def kernel_counters() -> dict:
+    """Snapshot: {"paths": {name: {path: n}}, "fallbacks": {name: {reason: n}}}."""
+    return {
+        "paths": {k: dict(v) for k, v in _kernel_paths.items()},
+        "fallbacks": {k: dict(v) for k, v in _kernel_fallbacks.items()},
+    }
+
+
+def reset_kernel_counters() -> None:
+    _kernel_paths.clear()
+    _kernel_fallbacks.clear()
 
 
 def _resolve(impl: str) -> tuple[str, bool]:
@@ -250,6 +293,7 @@ def matmul_fused(
     collect_stats: bool = False,
     out_dtype=None,
     impl: str = "auto",
+    name: str = "matmul_fused",
 ):
     """Fused dynamic-quant linear layer: ONE pass for quantize→GEMM→dequant.
 
@@ -271,10 +315,7 @@ def matmul_fused(
     path, interp = _resolve(impl)
     sx = jnp.asarray(sx, jnp.float32)
     per_token = sx.size > 1
-    if per_token and path == "pallas":
-        # the pallas kernel's scale operand contract is a (1, 1) scalar
-        # block; per-token rows run the (bit-identical) XLA twin instead
-        path = "xla"
+    record_path(name, path)
     packed = w_quantized and bits < 8
     planes = _PLANES[bits] if packed else 1
     w_mode = "packed" if packed else ("int8" if w_quantized else "quant")
@@ -312,6 +353,10 @@ def matmul_fused(
             else _pad2(w, Kwp, Np)
         )
     swp = jnp.pad(sw2, ((0, 0), (0, Np - N)), constant_values=1.0)
+    if per_token:
+        # padded rows are zeros; scale 1.0 quantizes them to 0 (exact,
+        # invisible to the GEMM and the absmax stats, sliced off anyway)
+        sx2 = jnp.pad(sx2, ((0, Mp - M), (0, 0)), constant_values=1.0)
     bp = None if bias is None else jnp.pad(bias.reshape(1, N), ((0, 0), (0, Np - N)))
     out = tugemm_fused_pallas(
         xp, wp, sx2, swp, bp,

@@ -84,7 +84,10 @@ def _kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    sx = sx_ref[0, 0]
+    # (1, 1) per-tensor or (block_m, 1) per-token: both broadcast over the
+    # (block_m, block_k) x block in the quant divide and over the
+    # (block_m, block_n) epilogue — the same elementwise float ops either way
+    sx = sx_ref[...]
     acc = acc_ref[...]
     ca_rows, rb_cols = [], []
     for p in range(planes):
@@ -163,8 +166,11 @@ def tugemm_fused_pallas(
 ):
     """Fused quantize→GEMM→dequant(+bias)(+stats) in one pallas_call.
 
-    x (M, K) float, sx (1, 1) f32 per-tensor scale, sw (1, N) f32 per-column
-    scale, bias (1, N) float or None. W layout by ``w_mode``:
+    x (M, K) float, sx f32 activation scale — (1, 1) per-tensor or (M, 1)
+    per-token (each row quantized and dequantized with its own scale; the
+    scale rides an (block_m, 1) operand block indexed by the M grid axis) —
+    sw (1, N) f32 per-column scale, bias (1, N) float or None. W layout by
+    ``w_mode``:
 
     - ``quant``:  (K, N) float, quantized on load with sw (dynamic mode)
     - ``int8``:   (K, N) int8, already quantized (prequant, 8-bit)
@@ -184,7 +190,9 @@ def tugemm_fused_pallas(
     assert Kx == planes * Kw, (x.shape, w.shape, w_mode, bits)
     assert M % block_m == 0 and N % block_n == 0 and Kw % block_k == 0, (
         (M, N, Kw), (block_m, block_n, block_k))
-    assert sx.shape == (1, 1) and sw.shape == (1, N), (sx.shape, sw.shape)
+    per_token = sx.shape[0] > 1
+    assert sx.shape == ((M, 1) if per_token else (1, 1)) and sw.shape == (1, N), (
+        sx.shape, sw.shape)
     grid = (M // block_m, N // block_n, Kw // block_k)
     n_kb = grid[2]
     lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
@@ -195,7 +203,11 @@ def tugemm_fused_pallas(
     in_specs = [pl.BlockSpec((block_m, block_k), x_map(p)) for p in range(planes)]
     in_specs += [
         pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        (
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0))
+            if per_token
+            else pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+        ),
         pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
     ]
     operands = [*([x] * planes), w, sx, sw]

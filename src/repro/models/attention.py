@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..parallel.sharding import ParamSpec, constrain
 from ..quant.qlinear import GemmBackend, dense
-from .flash import blockwise_attention
+from .flash import blockwise_attention, paged_decode_attention
 from .layers import apply_mrope, apply_rope, linear_spec, rms_norm, rms_norm_spec
 
 __all__ = [
@@ -297,12 +297,24 @@ def gqa_attention(
 
     window = None if is_global else cfg.sliding_window
     if cache is not None:
+        out = None
         if kv_view is not None:
             cache = kv_cache_write(cache, ("k", "v"), (k, v), None, view=kv_view)
             kv_len = kv_view.kv_len                            # (B,)
-            k_full = kv_cache_read(cache, "k", x.dtype, kv_len=kv_len, view=kv_view)
-            v_full = kv_cache_read(cache, "v", x.dtype, kv_len=kv_len, view=kv_view)
             q_offset = kv_view.pos                             # (B,)
+            if kv_view.tables is not None:
+                # fused paged kernel: pages stream HBM->VMEM once, dequant
+                # in the inner loop — no pool[tables] gather materialized
+                out = paged_decode_attention(
+                    q, cache, ("k",), "v", kv_view,
+                    kv_heads=kv, causal=cfg.causal, window=window,
+                    name="attn.paged",
+                )
+            if out is None:
+                k_full = kv_cache_read(
+                    cache, "k", x.dtype, kv_len=kv_len, view=kv_view)
+                v_full = kv_cache_read(
+                    cache, "v", x.dtype, kv_len=kv_len, view=kv_view)
         else:
             cache = kv_cache_write(cache, ("k", "v"), (k, v), cache_pos)
             capacity = cache["k"].shape[1]
@@ -310,16 +322,17 @@ def gqa_attention(
             k_full = kv_cache_read(cache, "k", x.dtype, kv_len=kv_len)
             v_full = kv_cache_read(cache, "v", x.dtype, kv_len=kv_len)
             q_offset = cache_pos
-        out = blockwise_attention(
-            q,
-            k_full,
-            v_full,
-            q_offset=q_offset,
-            kv_len=kv_len,
-            causal=cfg.causal,
-            window=window,
-            chunk=chunk,
-        )
+        if out is None:
+            out = blockwise_attention(
+                q,
+                k_full,
+                v_full,
+                q_offset=q_offset,
+                kv_len=kv_len,
+                causal=cfg.causal,
+                window=window,
+                chunk=chunk,
+            )
     else:
         out = blockwise_attention(
             q, k, v, causal=cfg.causal, window=window, chunk=chunk,
@@ -377,12 +390,29 @@ def mla_attention(
                        p["w_uk"]["kernel"].astype(jnp.float32)).astype(x.dtype)
     q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)          # (B,S,h,lora+rope)
 
+    # score scale must be 1/sqrt(nope+rope), not 1/sqrt(lora+rope):
+    # blockwise_attention scales by k dim; compensate.
+    comp = ((lora + rope_d) ** 0.5) / (scale_dim ** 0.5)
+
     if cache is not None and kv_view is not None:
         cache = kv_cache_write(cache, ("ckv", "kr"), (ckv, k_rope), None, view=kv_view)
         kv_len = kv_view.kv_len
+        q_offset = kv_view.pos
+        if kv_view.tables is not None:
+            # fused paged kernel: K = [ckv ; kr] concatenated per page
+            # in-register, V = the ckv pool — no gathered latent tensor
+            ctx = paged_decode_attention(
+                q_eff * comp, cache, ("ckv", "kr"), "ckv", kv_view,
+                kv_heads=1, causal=cfg.causal, name="mla.paged",
+            )
+            if ctx is not None:
+                out = jnp.einsum("bshl,lhv->bshv", ctx.astype(jnp.float32),
+                                 p["w_uv"]["kernel"].astype(jnp.float32)).astype(x.dtype)
+                y = dense(p["wo"], out.reshape(B, S, h * vd), backend=backend,
+                          name="mla.o")
+                return y, cache
         ckv_full = kv_cache_read(cache, "ckv", x.dtype, kv_len=kv_len, view=kv_view)
         kr_full = kv_cache_read(cache, "kr", x.dtype, kv_len=kv_len, view=kv_view)
-        q_offset = kv_view.pos
     elif cache is not None:
         cache = kv_cache_write(
             cache, ("ckv", "kr"), (ckv, k_rope), cache_pos
@@ -399,9 +429,6 @@ def mla_attention(
     # MQA in latent space: K = [ckv ; k_rope] (single head), V = ckv
     k_eff = jnp.concatenate([ckv_full, kr_full], axis=-1)[:, :, None, :]
     v_eff = ckv_full[:, :, None, :]
-    # score scale must be 1/sqrt(nope+rope), not 1/sqrt(lora+rope):
-    # blockwise_attention scales by k dim; compensate.
-    comp = ((lora + rope_d) ** 0.5) / (scale_dim ** 0.5)
     ctx = blockwise_attention(
         q_eff * comp, k_eff, v_eff,
         q_offset=q_offset, kv_len=kv_len, causal=cfg.causal, chunk=chunk,

@@ -26,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["blockwise_attention"]
+__all__ = ["blockwise_attention", "paged_decode_attention"]
 
 NEG_INF = -1e30
 
@@ -271,3 +271,59 @@ def blockwise_attention(
         return _decode_direct(q, k, v, q_offset, valid_len, causal, window, softcap)
     out, _ = _fwd_scan(q, k, v, q_offset, valid_len, causal, window, chunk, softcap)
     return out
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd_tot), pre-scaled by caller if MLA
+    cache: dict,               # paged pool buffers (pages+1, block_size, ...)
+    k_names: tuple[str, ...],  # pool names whose feature concat forms K
+    v_name: str,               # pool name read as V
+    view,                      # KVView with tables (paged layout)
+    *,
+    kv_heads: int,
+    causal: bool = True,
+    window: int | None = None,
+    name: str = "attn.paged",
+) -> jnp.ndarray | None:
+    """Fused paged read+attend via kernels/flash_paged.py, or ``None``.
+
+    Returning ``None`` tells the caller to take the reference path
+    (``kv_cache_read`` gather + :func:`blockwise_attention`) — so every
+    downgrade is an explicit fallback the kernel counters record, never a
+    silent rewrite of the math. The kernel applies when the resolved impl is
+    pallas (kernels.flash_paged.paged_impl: auto = TPU, or forced via
+    ``REPRO_PAGED_ATTN`` / set_paged_impl) and the step is not running a
+    sharded mesh program (the gather path owns the collective choreography).
+    """
+    from ..kernels import ops
+    from ..kernels.flash_paged import flash_paged_decode, paged_impl
+    from ..parallel import collectives as dist
+
+    path, interpret = paged_impl()
+    if path != "pallas":
+        ops.record_path(name, "xla")
+        return None
+    if dist.current_program() is not None:
+        ops.record_fallback(name, "mesh")
+        return None
+    int8 = cache[k_names[0]].dtype == jnp.int8
+
+    def pool3(n):  # (P+1, bs, kv, hd) and (P+1, bs, f) both -> (P+1, bs, kv*f)
+        p = cache[n]
+        return p.reshape(p.shape[0], p.shape[1], -1)
+
+    ops.record_path(name, "pallas")
+    return flash_paged_decode(
+        q,
+        tuple(pool3(n) for n in k_names),
+        tuple(cache[n + "_scale"] if int8 else None for n in k_names),
+        pool3(v_name),
+        cache[v_name + "_scale"] if int8 else None,
+        view.tables,
+        view.pos,
+        view.kv_len,
+        kv_heads=kv_heads,
+        causal=causal,
+        window=window,
+        interpret=interpret,
+    )

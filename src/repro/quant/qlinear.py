@@ -164,6 +164,7 @@ def _emit_fused(
         x2, w, sx=sx, sw=sw, bias=bias,
         bits=backend.bits, w_quantized=w_quantized,
         collect_stats=want, impl=backend.impl, out_dtype=out_dtype,
+        name=name,
     )
     if not want:
         return out, None

@@ -15,8 +15,11 @@ instruction, and charge each collective by kind:
     all-to-all         1 x result bytes
     collective-permute 1 x result bytes
 
-Hardware constants are TPU v5e-class, per the assignment: 197 bf16 TFLOP/s,
-819 GB/s HBM, ~50 GB/s/link ICI.
+Default hardware constants are TPU v5e-class, per the assignment: 197 bf16
+TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI. :data:`HW_PROFILES` carries named
+profiles per backend class and :func:`hw_profile` selects one by name or by
+the running JAX backend, so the same dry-run artifact can be re-priced for
+a different machine (benchmarks/roofline_all.py ``--hw``).
 """
 
 from __future__ import annotations
@@ -24,7 +27,10 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["HW", "CollectiveStats", "RooflineReport", "collective_stats", "analyze"]
+__all__ = [
+    "HW", "HW_PROFILES", "hw_profile",
+    "CollectiveStats", "RooflineReport", "collective_stats", "analyze",
+]
 
 
 @dataclass(frozen=True)
@@ -33,6 +39,39 @@ class HW:
     hbm_bw: float = 819e9           # bytes/s per chip
     ici_bw: float = 50e9            # bytes/s per link
     hbm_per_chip: float = 16e9      # v5e: 16 GB
+    name: str = "tpu"
+
+
+# Named machine classes for re-pricing the three terms. The numbers are
+# representative of the class, not a specific SKU: "tpu" is the v5e
+# assignment target (and the default ``HW()`` for backward compatibility);
+# "gpu" is an A100-80G-class part (312 bf16 TFLOP/s, ~2 TB/s HBM2e, 600
+# GB/s NVLink); "cpu" is a modern server socket (~2 f32 TFLOP/s AVX-512,
+# ~100 GB/s DDR, "link" = ~30 GB/s inter-socket, 64 GB visible).
+HW_PROFILES: dict[str, HW] = {
+    "tpu": HW(),
+    "gpu": HW(peak_flops=312e12, hbm_bw=2.0e12, ici_bw=600e9,
+              hbm_per_chip=80e9, name="gpu"),
+    "cpu": HW(peak_flops=2e12, hbm_bw=100e9, ici_bw=30e9,
+              hbm_per_chip=64e9, name="cpu"),
+}
+
+
+def hw_profile(name: str | None = None) -> HW:
+    """Resolve a named :class:`HW` profile.
+
+    ``None`` / ``"auto"`` selects by the running JAX backend (tpu/gpu/cpu;
+    unknown backends fall back to the tpu assignment target). The import is
+    lazy so artifact-only re-pricing never initializes a device runtime."""
+    if name in (None, "auto"):
+        import jax
+
+        return HW_PROFILES.get(jax.default_backend(), HW_PROFILES["tpu"])
+    prof = HW_PROFILES.get(name)
+    if prof is None:
+        raise KeyError(
+            f"unknown hw profile {name!r}; have {sorted(HW_PROFILES)}")
+    return prof
 
 
 _DTYPE_BYTES = {

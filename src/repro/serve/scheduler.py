@@ -1422,9 +1422,17 @@ class Scheduler:
         """Robustness snapshot (DESIGN.md §10): ladder state + transitions,
         per-class queue depths, pool occupancy, and every shed / preempt /
         stall / fault counter. Pure host bookkeeping — cheap enough to call
-        every tick."""
+        every tick.
+
+        ``kernels`` surfaces the trace-time Pallas-vs-XLA path counters
+        (kernels.ops): per-GEMM-name compiled paths and every explicit
+        fallback with its reason, so a silent accelerator downgrade shows up
+        in the health snapshot instead of only in wall-clock."""
+        from ..kernels import ops as _kops
+
         mgr = self.mgr
         return {
+            "kernels": _kops.kernel_counters(),
             "clock": self.clock,
             "ticks": self.ticks,
             "draining": self.draining,

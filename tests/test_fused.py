@@ -224,6 +224,79 @@ def test_fused_stats_multiblock_grid(bits):
     np.testing.assert_array_equal(np.asarray(rb_i)[:, 0], np.asarray(rb_r))
 
 
+# ------------------------------------------------ per-token scales (PR 9)
+# The (M, 1) scale operand block removed the per-token -> XLA downgrade;
+# these anchors hold the Pallas path to the same bit-exactness contract the
+# per-tensor path has always had, and pin the fallback counter at zero.
+@pytest.mark.parametrize("bits,kind", BITS)
+@pytest.mark.parametrize("M,K,N", SHAPES)
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fused_per_token_matches_unfused(bits, kind, M, K, N, impl):
+    if impl == "pallas_interpret" and M > 64:
+        pytest.skip("interpret mode is python-slow on large shapes")
+    x, w, b = _data(M, K, N, seed=80 + bits)
+    be = dict(impl=impl, act_scale="token")
+    yf = gemm(x, w, backend=GemmBackend(kind, fused=True, **be), bias=b)
+    yu = gemm(x, w, backend=GemmBackend(kind, fused=False, **be), bias=b)
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(yu))
+
+
+@pytest.mark.parametrize("bits", [8, 2])
+@pytest.mark.parametrize("w_quantized", [False, True])
+def test_fused_per_token_stats_exact(bits, w_quantized):
+    """Per-token quantization changes the integers; the in-pass stats must
+    be the stats OF those integers — oracle: standalone sweeps over the
+    per-row-quantized operands."""
+    M, K, N = 9, 44, 12
+    x, w, _ = _data(M, K, N, seed=90 + bits)
+    sx = compute_scale(x, bits, axis=0)        # (M,) per-row
+    sw = compute_scale(w, bits, axis=1)
+    xq = quantize(x, sx.reshape(-1, 1), bits)
+    wq = quantize(w, sw.reshape(1, -1), bits)
+    w_in = ops.pack_weights(wq, bits) if (w_quantized and bits < 8) else (
+        wq if w_quantized else w)
+    expect = ops.unary_step_stats(xq, wq, impl="xla")
+    for impl in IMPLS:
+        y, st = ops.matmul_fused(
+            x, w_in, sx=sx, sw=sw, bits=bits, w_quantized=w_quantized,
+            collect_stats=True, impl=impl,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st.step_cycles), np.asarray(expect.step_cycles)
+        )
+        assert int(st.serial_cycles) == int(expect.serial_cycles)
+        assert int(st.parallel_cycles) == int(expect.parallel_cycles)
+        y_ref = ops.matmul_int8(xq, wq, impl="xla").astype(jnp.float32) * (
+            sx.reshape(-1, 1) * sw.reshape(1, -1))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_per_token_pallas_no_fallback():
+    """The counter the PR-9 acceptance pins: a per-token GEMM on the Pallas
+    path records path=pallas and ZERO fallbacks — the silent per-token ->
+    XLA downgrade stays removed."""
+    x, w, b = _data(10, 32, 16, seed=99)
+    ops.reset_kernel_counters()
+    be = GemmBackend("int8", impl="pallas_interpret", fused=True,
+                     act_scale="token")
+    gemm(x, w, backend=be, bias=b, name="probe.pt").block_until_ready()
+    counters = ops.kernel_counters()
+    assert counters["paths"].get("probe.pt") == {"pallas": 1}, counters
+    assert "probe.pt" not in counters["fallbacks"], counters
+    ops.reset_kernel_counters()
+
+
+def test_kernel_counters_record_xla_path():
+    """The observable half: an impl=xla GEMM shows up as path=xla (that is
+    what health()['kernels'] and report.py surface)."""
+    x, w, _ = _data(4, 16, 8, seed=98)
+    ops.reset_kernel_counters()
+    gemm(x, w, backend=GemmBackend("int8", impl="xla", fused=True),
+         name="probe.xla").block_until_ready()
+    assert ops.kernel_counters()["paths"].get("probe.xla") == {"xla": 1}
+    ops.reset_kernel_counters()
+
+
 # ------------------------------------------------------- kernel vs ref twin
 @pytest.mark.parametrize("bits", [8, 4, 2])
 @pytest.mark.parametrize("w_quantized", [False, True])
