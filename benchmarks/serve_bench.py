@@ -188,6 +188,7 @@ def run_overload(cfg, rc, params, *, capacity, max_batch, num_pages,
         "engine_stalls": h["engine_stalls"],
         "ladder_transitions": len(h["ladder"]["transitions"]),
         "ladder_occupancy": {k: v / total_occ for k, v in occ.items()},
+        "latency": h["latency"],
     }
     # every submitted request must have reached a terminal state
     unresolved = [r.rid for _, r in arrivals
@@ -384,6 +385,13 @@ def main(argv=None):
           f"rejections {overload['rejections']}, "
           f"engine_stalls {overload['engine_stalls']}, "
           f"unresolved {overload['unresolved']}")
+    lat = overload["latency"]
+    print("[serve_bench] overload latency (s):")
+    print(f"    {'metric':8s} {'p50':>9s} {'p95':>9s} {'p99':>9s} {'n':>5s}")
+    for name, key in [("ttft", "ttft_s"), ("itl", "itl_s"), ("tick", "tick_s")]:
+        row = lat[key]
+        print(f"    {name:8s} {row['p50']:9.4f} {row['p95']:9.4f} "
+              f"{row['p99']:9.4f} {row['count']:5d}")
     if overload["engine_stalls"] or overload["unresolved"]:
         raise SystemExit("[serve_bench] overload scenario FAILED: engine "
                          "stalled or requests left unresolved")

@@ -73,6 +73,16 @@ echo "== spec smoke (speculative int2-draft decode, gamma=2 greedy)"
 python -m pytest -x -q -p no:randomly tests/test_spec.py
 python benchmarks/spec_bench.py --fast
 
+echo "== obs smoke (tracing/metrics: schema, bit-exactness, overhead gate)"
+# the observability gate (DESIGN.md §14): tracer/registry units, health()
+# golden keys, tracing-on/off greedy bit-exactness (plain + spec), kernel
+# counter scoping. Then obs_bench --fast: an interleaved tracing A/B that
+# hard-fails if --trace costs >3% decode tokens/s, and a 2x-overload
+# mini-trace re-validated against the Chrome trace-event schema (full span
+# taxonomy + pool/energy counter tracks + shed/reject instants present).
+python -m pytest -x -q -p no:randomly tests/test_obs.py
+python benchmarks/obs_bench.py --fast
+
 echo "== dist smoke (dp×tp sharded serving on an 8-device host mesh)"
 # the sharded-serving gate (DESIGN.md §12) runs in its own process so the
 # forced 8-device CPU topology cannot leak into the rest of the suite:

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.tugemm import TuGemmStats
+from ..obs.metrics import MetricsRegistry
 from . import ref
 from .packing import BITS_TO_PLANES, pack_planes, pad_to_multiple
 from .quantize import quantize_sym_pallas
@@ -43,6 +44,8 @@ __all__ = [
     "record_path",
     "record_fallback",
     "kernel_counters",
+    "kernel_counters_since",
+    "kernel_registry",
     "reset_kernel_counters",
 ]
 
@@ -81,38 +84,76 @@ def counting_dispatches():
 # and any silent downgrade from a requested pallas path records a fallback
 # with its reason. These are trace-time counters (jit cache hits do not
 # re-trace): they answer "which kernel did each GEMM name compile to", which
-# is exactly the question a silent ``path = "xla"`` downgrade used to hide
-# (the per-token-scale fallback this PR removed). Surfaced through
-# ``Scheduler.health()["kernels"]`` and ``core.report``.
+# is exactly the question a silent ``path = "xla"`` downgrade used to hide.
+# Surfaced through ``Scheduler.health()["kernels"]`` and ``core.report``.
+#
+# Backing store is a process-wide obs.metrics registry (labeled counters
+# kernel_path_total{name,path} / kernel_fallback_total{name,reason}). The
+# process-global is deliberate — tracing happens wherever jit decides to —
+# but consumers must SCOPE it: ``kernel_counters_since(base)`` diffs against
+# a baseline snapshot, which is how two back-to-back Schedulers in one
+# process stop seeing each other's counts (tests/test_obs.py regression).
 
-_kernel_paths: dict[str, dict[str, int]] = {}
-_kernel_fallbacks: dict[str, dict[str, int]] = {}
+_registry = MetricsRegistry()
+_paths = _registry.counter(
+    "kernel_path_total",
+    "kernel trace events by compiled path", labels=("name", "path"))
+_fallbacks = _registry.counter(
+    "kernel_fallback_total",
+    "pallas->xla downgrades by reason", labels=("name", "reason"))
+
+
+def kernel_registry() -> MetricsRegistry:
+    """The process-wide kernel-counter registry (Prometheus/JSONL export)."""
+    return _registry
 
 
 def record_path(name: str, path: str) -> None:
     """Record that the kernel call ``name`` traced to ``path`` (pallas|xla)."""
-    d = _kernel_paths.setdefault(name, {})
-    d[path] = d.get(path, 0) + 1
+    _paths.labels(name, path).inc()
 
 
 def record_fallback(name: str, reason: str) -> None:
     """Record a pallas→xla downgrade for ``name`` (also counts an xla path)."""
-    d = _kernel_fallbacks.setdefault(name, {})
-    d[reason] = d.get(reason, 0) + 1
+    _fallbacks.labels(name, reason).inc()
     record_path(name, "xla")
+
+
+def _nested(fam) -> dict:
+    out: dict[str, dict[str, int]] = {}
+    for (name, key2), child in fam.children.items():
+        if child.value:
+            out.setdefault(name, {})[key2] = child.value
+    return out
 
 
 def kernel_counters() -> dict:
     """Snapshot: {"paths": {name: {path: n}}, "fallbacks": {name: {reason: n}}}."""
-    return {
-        "paths": {k: dict(v) for k, v in _kernel_paths.items()},
-        "fallbacks": {k: dict(v) for k, v in _kernel_fallbacks.items()},
-    }
+    return {"paths": _nested(_paths), "fallbacks": _nested(_fallbacks)}
+
+
+def kernel_counters_since(base: dict) -> dict:
+    """Process-global counters minus a ``kernel_counters()`` baseline — the
+    scoped view an engine reports so it never claims another engine's
+    traces. Zero-valued entries are dropped."""
+    cur = kernel_counters()
+    out: dict = {}
+    for sec in ("paths", "fallbacks"):
+        bs = base.get(sec, {})
+        d: dict[str, dict[str, int]] = {}
+        for name, by in cur[sec].items():
+            bn = bs.get(name, {})
+            row = {k: v - bn.get(k, 0) for k, v in by.items()
+                   if v - bn.get(k, 0) > 0}
+            if row:
+                d[name] = row
+        out[sec] = d
+    return out
 
 
 def reset_kernel_counters() -> None:
-    _kernel_paths.clear()
-    _kernel_fallbacks.clear()
+    _paths.children.clear()
+    _fallbacks.children.clear()
 
 
 def _resolve(impl: str) -> tuple[str, bool]:

@@ -104,6 +104,21 @@ def main(argv=None):
     ap.add_argument("--energy", action="store_true",
                     help="track per-request SlotMeter energy and print the "
                          "summary at exit (survives a SIGINT drain)")
+    # observability (scheduler engine; DESIGN.md §14)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request-lifecycle + tick-phase spans and "
+                         "pool/energy counter tracks, and write a Chrome "
+                         "trace-event JSON loadable at https://ui.perfetto.dev "
+                         "(tokens are bit-identical with tracing on or off)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.jsonl",
+                    help="append one JSON line with the full metrics-registry "
+                         "snapshot (counters/gauges/latency histograms) at "
+                         "exit; use repeatedly to build a time series")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR "
+                         "(TensorBoard/Perfetto); the jitted steps carry "
+                         "serve/* named scopes that line up with --trace "
+                         "spans by name")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -166,6 +181,11 @@ def main(argv=None):
                                 if args.tenant_budget else None),
                 default_ttl=args.ttl_ticks or None,
             )
+            tracer = None
+            if args.trace:
+                from ..obs.trace import Tracer
+
+                tracer = Tracer()
             eng = Scheduler(
                 cfg, rc, params,
                 capacity=args.capacity, max_batch=args.max_batch,
@@ -173,7 +193,7 @@ def main(argv=None):
                 temperature=args.temperature, seed=args.seed,
                 draft_params=draft_params,
                 admission=adm, track_energy=args.energy,
-                mesh=args.mesh,
+                mesh=args.mesh, tracer=tracer,
             )
         else:
             eng = Engine(
@@ -195,7 +215,13 @@ def main(argv=None):
         restore = install_sigint_drain(eng) if use_scheduler else None
         t0 = time.perf_counter()
         try:
-            done = eng.run()
+            if args.profile_dir:
+                from ..obs.profile import device_trace
+
+                with device_trace(args.profile_dir):
+                    done = eng.run()
+            else:
+                done = eng.run()
         finally:
             if restore is not None:
                 restore()
@@ -245,6 +271,30 @@ def main(argv=None):
             for m in eng.energy_summary():
                 print(f"  energy: rid={m['rid']} tokens={m['tokens']} "
                       f"cycles={m['cycles']:.3g} energy_j={m['energy_j']:.3g}")
+        lat = h.get("latency")
+        if lat and lat["ttft_s"]["count"]:
+            t, i = lat["ttft_s"], lat["itl_s"]
+            print(f"  latency: ttft_s p50={t['p50']:.4f} p95={t['p95']:.4f} "
+                  f"p99={t['p99']:.4f} (n={t['count']}) | "
+                  f"itl_s p50={i['p50']:.4f} p95={i['p95']:.4f} "
+                  f"p99={i['p99']:.4f} (n={i['count']})")
+        if args.trace:
+            from ..obs.trace import trace_summary, validate_chrome_trace
+
+            obj = eng.trace.to_dict()
+            validate_chrome_trace(obj)
+            eng.trace.export(args.trace)
+            ts = trace_summary(obj)
+            print(f"  trace: {args.trace} ({ts['events']} events, "
+                  f"{ts['spans']} spans, {ts['counters']} counter samples, "
+                  f"{ts['request_tracks']} request tracks) — open in "
+                  f"https://ui.perfetto.dev")
+        if args.metrics_out:
+            eng.metrics.emit_jsonl(
+                args.metrics_out,
+                extra={"arch": args.arch, "engine": "scheduler",
+                       "wall_s": round(dt, 3)})
+            print(f"  metrics: appended snapshot to {args.metrics_out}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
     return done

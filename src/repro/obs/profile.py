@@ -1,0 +1,71 @@
+"""Device-side profiler hooks: ``jax.named_scope`` annotations + optional
+``jax.profiler`` trace wiring (DESIGN.md §14).
+
+The host tracer (obs/trace.py) records *when* the scheduler dispatched a
+step; this module makes the *device* side legible: the jitted mixed step,
+the speculative draft pass, and the verify pass each trace under a stable
+named scope, so an XLA/perfetto device profile captured with
+:func:`device_trace` lines its kernels up against the host tick timeline by
+name. Scopes are trace-time only — zero runtime cost on the compiled path
+and no change to the lowered program's numerics (the HLO just carries
+different metadata names), which keeps the bit-exactness gate trivial.
+
+Scope taxonomy::
+
+    serve/step          the scheduler's ONE mixed prefill+decode step
+    serve/verify        the all-logits speculative verify step
+    serve/draft         the draft-policy mixed step (serve/spec.py)
+    serve/fallback      the quarantined-row bf16 fallback step
+    serve/logits        the lm-head projection inside any of the above
+
+``jax.profiler.start_trace`` needs a writable logdir and is unavailable on
+some backends; :func:`device_trace` degrades to a warning-once no-op rather
+than failing a serve run that only wanted host tracing.
+"""
+
+from __future__ import annotations
+
+import logging
+from contextlib import contextmanager
+
+import jax
+
+__all__ = ["named_scope", "device_trace"]
+
+log = logging.getLogger("repro.obs")
+
+_warned = False
+
+
+def named_scope(name: str):
+    """Stable alias for ``jax.named_scope`` (trace-time annotation)."""
+    return jax.named_scope(name)
+
+
+@contextmanager
+def device_trace(logdir: str | None):
+    """Wrap a block in ``jax.profiler.trace(logdir)`` when ``logdir`` is
+    set; no-op (with one warning on failure) otherwise. The captured device
+    trace is viewable in Perfetto/TensorBoard and carries the serve/*
+    named scopes above."""
+    global _warned
+    if not logdir:
+        yield
+        return
+    started = False
+    try:
+        jax.profiler.start_trace(logdir)
+        started = True
+    except Exception as e:  # noqa: BLE001 - profiling must never kill serving
+        if not _warned:
+            _warned = True
+            log.warning("obs: jax.profiler unavailable (%r) — device trace "
+                        "disabled, host tracing unaffected", e)
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as e:  # noqa: BLE001
+                log.warning("obs: jax.profiler.stop_trace failed: %r", e)

@@ -51,6 +51,7 @@ from ..configs.base import ModelConfig, RunConfig
 from ..core.tugemm import TuGemmStats
 from ..models.attention import KVView
 from ..models.transformer import forward, lm_logits
+from ..obs.profile import named_scope
 from ..quant import capture as stats_capture
 from . import collectives as dist
 from .sharding import suspend_mesh
@@ -443,13 +444,19 @@ def build_sharded_step(
             batch["positions"] = jnp.stack([pp, pp, pp])
         with suspend_mesh(), dist.activate(prog):
             with stats_capture.capture_stats(scalars_only=not with_stats) as cap:
-                h, caches, _ = forward(
-                    cfg_local, rc, params, batch,
-                    caches=caches, cache_pos=pos_l, kv_view=view,
-                )
-                idx = jnp.clip(lens_l - 1, 0, W - 1)
-                h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
-                logits = lm_logits(cfg_local, rc, params, h_last)[:, 0, :]
+                # serve/* named scopes: the device profile (obs/profile.py
+                # device_trace) lines sharded kernels up against the host
+                # tick timeline by name, same taxonomy as the 1-device step
+                with named_scope("serve/step"):
+                    h, caches, _ = forward(
+                        cfg_local, rc, params, batch,
+                        caches=caches, cache_pos=pos_l, kv_view=view,
+                    )
+                    with named_scope("serve/logits"):
+                        idx = jnp.clip(lens_l - 1, 0, W - 1)
+                        h_last = jnp.take_along_axis(
+                            h, idx[:, None, None], axis=1)
+                        logits = lm_logits(cfg_local, rc, params, h_last)[:, 0, :]
         # every stats leaf gains leading (dp, tp) device axes so one
         # P(dp, tp) prefix out_spec covers the whole (trace-dependent) tree
         tree = jax.tree.map(lambda a: a[None, None], cap.tree)

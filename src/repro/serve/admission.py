@@ -39,6 +39,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
+from ..obs.metrics import MetricsRegistry
+
 __all__ = [
     "PRIORITIES",
     "LADDER_LEVELS",
@@ -115,11 +117,40 @@ class AdmissionController:
         self.queues: dict[str, deque] = {p: deque() for p in PRIORITIES}
         self.tenant_spent: dict[str, int] = {}
         self.rejections: list[Rejection] = []
+        # registry-backed counters (obs/metrics.py): ``submitted`` /
+        # ``admitted`` / ``sheds`` are class-level properties over these, so
+        # the historical int-attribute write sites keep working while the
+        # numbers export through Prometheus/JSONL. A standalone controller
+        # owns its own registry until a Scheduler re-homes it (bind_registry).
+        self.metrics = MetricsRegistry()
+        self._init_metric_handles()
         self.submitted = 0
         self.admitted = 0
         self.sheds = 0                    # rejections of previously-queued work
         self.paused = False               # ladder level 5
         self.draining = False             # graceful shutdown
+
+    def _init_metric_handles(self) -> None:
+        m = self.metrics
+        self._ctr = {
+            "submitted": m.counter("admission_submitted_total",
+                                   "requests offered to the controller"),
+            "admitted": m.counter("admission_admitted_total",
+                                  "requests that first entered a slot"),
+            "sheds": m.counter("admission_sheds_total",
+                               "rejections of previously-queued work"),
+        }
+        self._c_rejections = m.counter(
+            "admission_rejections_total",
+            "structured rejections by reason", labels=("reason",))
+
+    def bind_registry(self, registry: MetricsRegistry) -> None:
+        """Re-home this controller's metrics onto ``registry`` (the owning
+        Scheduler's): families merge in (counters add on collision), then
+        local handles are re-fetched so both objects write one store."""
+        registry.adopt(self.metrics)
+        self.metrics = registry
+        self._init_metric_handles()
 
     # ------------------------------------------------------------- helpers
     @staticmethod
@@ -130,6 +161,7 @@ class AdmissionController:
         r = Rejection(rid=req.rid, reason=reason, detail=detail, tick=now)
         req.rejected = r
         self.rejections.append(r)
+        self._c_rejections.labels(reason).inc()
         return r
 
     def _shed(self, req, reason: str, now: int, detail: str = "") -> Rejection:
@@ -299,6 +331,24 @@ class AdmissionController:
         for r in self.rejections:
             out[r.reason] = out.get(r.reason, 0) + 1
         return out
+
+
+def _adm_counter_property(attr: str):
+    def fget(self):
+        return int(self._ctr[attr].value)
+
+    def fset(self, v):
+        self._ctr[attr].value = v
+
+    return property(fget, fset)
+
+
+# Registry-backed views over the legacy counter attributes — instance
+# assignment (``self.sheds += 1``, including the Scheduler's own writes to
+# ``self.admission.sheds``) routes through the property setter.
+for _a in ("submitted", "admitted", "sheds"):
+    setattr(AdmissionController, _a, _adm_counter_property(_a))
+del _a
 
 
 # ------------------------------------------------------------------ ladder

@@ -261,6 +261,39 @@ class BlockManager:
         self.cow_copies: list[tuple[int, int]] = []
         self.cow_events = 0
 
+    # -------------------------------------------------------- observability
+    def bind_registry(self, registry) -> None:
+        """Expose pool/prefix state as callback gauges on an obs
+        MetricsRegistry (DESIGN.md §14): read lazily at snapshot time, so
+        the allocator's hot paths stay untouched — no per-mutation pushes,
+        no behavior change."""
+        registry.gauge_fn(
+            "cache_pages",
+            lambda: {"state=in_use": self.pages_in_use,
+                     "state=live": self.live_pages,
+                     "state=cached": self.cached_pages,
+                     "state=free": len(self.free)},
+            help="pool pages by state")
+        registry.gauge_fn(
+            "cache_high_water_pages",
+            lambda: {"kind=total": self.high_water,
+                     "kind=live": self.live_high_water},
+            help="page-pool high-water marks")
+        registry.gauge_fn("cache_cow_events", lambda: self.cow_events,
+                          help="copy-on-write resolutions so far")
+        registry.gauge_fn("cache_table_version", lambda: self.version,
+                          help="block-table mutation counter")
+        registry.gauge_fn("cache_injected_alloc_failures",
+                          lambda: self.injected_failures,
+                          help="fault-plan induced allocation failures")
+        if self.prefix is not None:
+            registry.gauge_fn(
+                "cache_prefix",
+                lambda: {"kind=hits": self.prefix.hits,
+                         "kind=evictions": self.prefix.evictions,
+                         "kind=indexed_pages": len(self.prefix)},
+                help="prefix-trie hit/eviction/index counters")
+
     # ------------------------------------------------------------- queries
     @property
     def pages_in_use(self) -> int:

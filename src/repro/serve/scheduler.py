@@ -45,6 +45,7 @@ non-finite, retries it clean, and escalates to a ``rc.fallback_policy``
 from __future__ import annotations
 
 import logging
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -55,6 +56,10 @@ from ..configs.base import ModelConfig, RunConfig
 from ..core.report import slot_energy
 from ..models import KVView, forward, init_caches, lm_logits
 from ..models.transformer import plan_groups
+from ..obs.logs import kv
+from ..obs.metrics import MetricsRegistry, family_percentile as _family_percentile
+from ..obs.profile import named_scope
+from ..obs.trace import NULL_TRACER, PID_REQUESTS, PID_SCHED, TID_TICK
 from ..parallel.sharding import current_ctx as sharding_ctx
 from ..quant import capture as stats_capture
 from ..quant.capture import tree_totals_by_bits
@@ -287,6 +292,7 @@ def build_mixed_step(
     *,
     with_stats: bool = False,
     all_logits: bool = False,
+    scope: str = "serve/step",
 ):
     """One tick: (params, caches, tokens (B,W), pos (B,), lens (B,), tables)
     -> (caches, logits[, stats]).
@@ -313,14 +319,16 @@ def build_mixed_step(
                 jnp.arange(S, dtype=jnp.int32), (B, S)
             )
             batch["positions"] = jnp.stack([p, p, p])
-        h, caches, _ = forward(
-            cfg, rc, params, batch, caches=caches, cache_pos=pos, kv_view=view
-        )
-        if all_logits:
-            return caches, lm_logits(cfg, rc, params, h)       # (B, W, V)
-        idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
-        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)  # (B,1,D)
-        logits = lm_logits(cfg, rc, params, h_last)
+        with named_scope(scope):
+            h, caches, _ = forward(
+                cfg, rc, params, batch, caches=caches, cache_pos=pos, kv_view=view
+            )
+            with named_scope("serve/logits"):
+                if all_logits:
+                    return caches, lm_logits(cfg, rc, params, h)   # (B, W, V)
+                idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
+                h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+                logits = lm_logits(cfg, rc, params, h_last)        # (B,1,V)
         return caches, logits[:, 0, :]
 
     if not with_stats:
@@ -373,6 +381,43 @@ class _Slot:
         return self.pos < len(self.prompt)
 
 
+# Legacy plain-int Scheduler counters, now registry-backed (DESIGN.md §14).
+# Each becomes a class-level property over a ``serve_<attr>_total`` Counter:
+# the historical ``self.x += 1`` / ``self.x = 0`` write sites keep working,
+# while Prometheus/JSONL export and health() read the same storage.
+_SCHED_COUNTERS = {
+    "generated_tokens": "tokens emitted (decode + prefill-riding first tokens)",
+    "drafted_tokens": "speculative proposals drafted",
+    "accepted_draft_tokens": "drafted tokens the target verified and kept",
+    "ticks": "tick() calls that ran a device step",
+    "preemptions": "slots evicted under pool pressure (recompute-on-resume)",
+    "prefix_hits": "admissions that forked a cached prefix",
+    "prefix_tokens_reused": "prompt tokens served from shared pages",
+    "prefill_tokens_computed": "prompt tokens actually stepped",
+    "deadline_misses": "completions past their deadline",
+    "stalled_rows_total": "row-ticks lost to pool exhaustion",
+    "stall_episodes": "distinct pool-pressure episodes",
+    "engine_stalls": "unexplained no-progress ticks (must stay 0)",
+    "idle_fault_ticks": "ticks idled by injected allocation exhaustion",
+    "nan_events": "non-finite logit rows quarantined",
+    "fallback_retries": "rows escalated to the fallback-policy step",
+    "draft_stale_events": "slots entering draft staleness",
+    "draft_resyncs": "stale slots recovered via draft resync",
+    "moe_dropped_tokens": "router capacity drops (never silent)",
+}
+
+
+def _counter_property(attr: str):
+    def fget(self):
+        v = self._ctr[attr].value
+        return int(v) if float(v).is_integer() else v
+
+    def fset(self, v):
+        self._ctr[attr].value = v
+
+    return property(fget, fset)
+
+
 class Scheduler:
     """Block-managed, continuously-batched serving engine.
 
@@ -398,6 +443,8 @@ class Scheduler:
         admission: AdmissionController | None = None,
         faults=None,
         mesh=None,
+        tracer=None,
+        metrics: MetricsRegistry | None = None,
     ):
         for g in plan_groups(cfg):
             for kind in g.kinds:
@@ -413,6 +460,34 @@ class Scheduler:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.track_energy = track_energy
+
+        # --- observability (DESIGN.md §14) ------------------------------
+        # ``self.trace`` is NULL_TRACER when tracing is off: every call site
+        # guards arg construction on ``self.trace.enabled`` so a disabled
+        # tracer costs one attribute load per tick phase. ``self.metrics``
+        # always exists — the plain-int counters this class used to carry
+        # are now class-level properties backed by registry Counters (the
+        # ~30 existing ``self.x += 1`` write sites work unchanged), so
+        # health() is a registry view and Prometheus/JSONL export is free.
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._init_metrics()
+        if self.trace.enabled:
+            self.trace.name_process(PID_SCHED, "scheduler")
+            self.trace.name_thread(PID_SCHED, TID_TICK, "tick")
+            self.trace.name_process(PID_REQUESTS, "requests")
+        # kernel path counters are process-global (jit trace-time events);
+        # snapshot at construction so health() reports only THIS engine's
+        # trace activity (kernels/ops.kernel_counters_since) — two
+        # back-to-back schedulers must not see each other's counts.
+        from ..kernels import ops as _kops
+        self._kops = _kops
+        self._kernel_base = _kops.kernel_counters()
+        self._t_submit: dict[int, float] = {}    # rid -> wall time at submit
+        self._t_queued: dict[int, float] = {}    # rid -> tracer ts at enqueue
+        self._t_emit: dict[int, float] = {}      # rid -> wall time, last emit
+        self._tick_energy_j = 0.0                # modeled J this tick
+        self._total_energy_j = 0.0               # modeled J since construction
 
         self.paged = rc.kv_layout == "paged"
         self.prefix_caching = bool(getattr(rc, "prefix_cache", False))
@@ -431,6 +506,7 @@ class Scheduler:
                 pages, rc.block_size, max_batch, capacity,
                 prefix_cache=self.prefix_caching,
             )
+            self.mgr.bind_registry(self.metrics)
             self.caches = init_caches(cfg, rc, max_batch, capacity, num_pages=pages)
         else:
             self.mgr = None
@@ -486,7 +562,8 @@ class Scheduler:
                 track_energy=track_energy, draft_params=draft_params,
             )
             self._vstep = jax.jit(
-                build_mixed_step(cfg, rc, with_stats=track_energy, all_logits=True),
+                build_mixed_step(cfg, rc, with_stats=track_energy,
+                                 all_logits=True, scope="serve/verify"),
                 donate_argnums=(1,),
             )
         self.slots: list[_Slot | None] = [None] * max_batch
@@ -536,6 +613,96 @@ class Scheduler:
         self._fb_unavailable = False
         if self.mgr is not None and self.faults is not None:
             self.mgr.fault_hook = self._alloc_fault_hook
+        # re-home the admission controller's counters onto this registry so
+        # one scrape covers the whole engine (its handles are re-fetched)
+        self.admission.bind_registry(self.metrics)
+        self._register_gauges()
+
+    # ---------------------------------------------------------- observability
+    def _init_metrics(self) -> None:
+        m = self.metrics
+        self._ctr = {
+            a: m.counter(f"serve_{a}_total", h)
+            for a, h in _SCHED_COUNTERS.items()
+        }
+        self._h_ttft = m.histogram(
+            "serve_ttft_seconds",
+            "wall time from submit to first emitted token", labels=("priority",))
+        self._h_itl = m.histogram(
+            "serve_itl_seconds",
+            "wall time between consecutive emitted tokens", labels=("priority",))
+        self._h_queue_wait = m.histogram(
+            "serve_queue_wait_ticks",
+            "logical ticks spent queued before (re)admission",
+            labels=("priority",),
+            buckets=(0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024))
+        self._h_tick = m.histogram(
+            "serve_tick_seconds", "wall duration of one tick() call")
+        self._c_sched_tokens = m.counter(
+            "serve_scheduled_tokens_total",
+            "tokens packed into device steps, by phase", labels=("phase",))
+        self._c_cycles = m.counter(
+            "serve_modeled_cycles_total",
+            "modeled tuGEMM cycles by bitwidth (serial variant)",
+            labels=("bits", "bucket"))
+        self._c_energy = m.counter(
+            "serve_modeled_energy_joules",
+            "modeled tuGEMM energy by bucket (Table-I pricing)",
+            labels=("bucket",))
+
+    def _register_gauges(self) -> None:
+        """Callback gauges over structural state — read at snapshot time, no
+        per-mutation pushes. Registered at the END of __init__ so every
+        attribute they close over exists."""
+        m = self.metrics
+        m.gauge_fn("serve_active_slots",
+                   lambda: sum(s is not None for s in self.slots),
+                   help="slots currently holding a request")
+        m.gauge_fn("serve_clock", lambda: self.clock,
+                   help="logical scheduler clock (ticks since construction)")
+        m.gauge_fn("serve_queue_depth",
+                   lambda: {f"priority={c}": d
+                            for c, d in self.admission.depths().items()},
+                   help="queued requests by priority class")
+        m.gauge_fn("serve_ladder_level", lambda: self.ladder.level,
+                   help="degradation ladder level (0=healthy)")
+        # pool occupancy gauges live on the BlockManager (cache_pages etc.,
+        # registered via mgr.bind_registry at construction)
+
+    def _note_step_energy(self, by_bits: dict, *, bucket: str) -> None:
+        """Mirror one device step's pool-wide tuGEMM cycle totals into the
+        registry and the modeled-energy accumulators (Table-I pricing via
+        core.report.slot_energy). Powers the Perfetto energy counter track
+        and serve_modeled_* metrics; no-op when the step carries no stats."""
+        if not by_bits:
+            return
+        tick_j = 0.0
+        for b, tot in by_bits.items():
+            cyc = tot["serial_cycles"]
+            self._c_cycles.labels(str(b), bucket).inc(cyc)
+            tick_j += slot_energy(b, "serial", cyc)[1]
+        self._c_energy.labels(bucket).inc(tick_j)
+        self._tick_energy_j += tick_j
+        self._total_energy_j += tick_j
+
+    def _emit_counter_tracks(self, tick_wall_s: float) -> None:
+        """Per-tick Perfetto counter samples (pool occupancy, queue depth,
+        ladder level, modeled power). Only called when tracing is on."""
+        tr = self.trace
+        ts = tr.ts()
+        if self.mgr is not None:
+            tr.counter("pool_pages", {
+                "in_use": self.mgr.pages_in_use,
+                "live": self.mgr.live_pages,
+            }, ts=ts)
+        tr.counter("queue_depth", self.admission.depths(), ts=ts)
+        tr.counter("ladder_level", {"level": self.ladder.level}, ts=ts)
+        if self.track_energy:
+            mw = (self._tick_energy_j / tick_wall_s * 1e3
+                  if tick_wall_s > 0 else 0.0)
+            tr.counter("modeled_power_mw", {"mw": round(mw, 3)}, ts=ts)
+            tr.counter("modeled_energy_mj",
+                       {"mj": round(self._total_energy_j * 1e3, 6)}, ts=ts)
 
     # ---------------------------------------------------------------- admin
     @property
@@ -554,7 +721,23 @@ class Scheduler:
                 f"request {req.rid}: prompt of {len(req.prompt)} tokens "
                 f"exceeds capacity {self.capacity} - 1"
             )
-        return self.admission.submit(req, self.clock)
+        rej = self.admission.submit(req, self.clock)
+        if rej is None:
+            self._t_submit[req.rid] = time.perf_counter()
+        if self.trace.enabled:
+            tr = self.trace
+            tr.name_thread(PID_REQUESTS, req.rid, f"req {req.rid}")
+            if rej is None:
+                self._t_queued[req.rid] = tr.ts()
+                tr.instant("submit", PID_REQUESTS, req.rid, args={
+                    "rid": req.rid, "tenant": req.tenant,
+                    "priority": req.priority,
+                    "prompt_tokens": len(req.prompt),
+                })
+            else:
+                tr.instant("reject", PID_REQUESTS, req.rid,
+                           args={"rid": req.rid, "reason": rej.reason})
+        return rej
 
     def begin_drain(self) -> None:
         """Graceful shutdown: stop admitting new work (structured
@@ -586,6 +769,20 @@ class Scheduler:
                 )
                 self.slots[i] = sl
                 self._admit_counter += 1
+                self._h_queue_wait.labels(req.priority).observe(
+                    max(self.clock - req.submitted_tick, 0))
+                if self.trace.enabled:
+                    tr = self.trace
+                    now = tr.ts()
+                    t0 = self._t_queued.pop(req.rid, now)
+                    tr.complete("queued", PID_REQUESTS, req.rid, t0,
+                                now - t0, args={"rid": req.rid,
+                                                "priority": req.priority})
+                    tr.instant("admit", PID_REQUESTS, req.rid, args={
+                        "rid": req.rid, "slot": i,
+                        "wait_ticks": self.clock - req.submitted_tick,
+                        "readmit": req.admitted,
+                    }, ts=now)
                 if self.prefix_caching:
                     # longest cached block-aligned prefix of the effective
                     # prompt: fork its pages (refcount++, zero allocation)
@@ -637,6 +834,15 @@ class Scheduler:
         if self.mgr is not None:
             self.mgr.release(i)
         self.slots[i] = None
+        self._t_submit.pop(sl.req.rid, None)
+        self._t_emit.pop(sl.req.rid, None)
+        if self.trace.enabled:
+            self.trace.instant("finish", PID_REQUESTS, sl.req.rid, args={
+                "rid": sl.req.rid, "generated": len(sl.req.out),
+                "deadline_missed": bool(
+                    sl.req.deadline is not None
+                    and self.clock > sl.req.deadline),
+            })
 
     def _shed_slot(self, i: int, reason: str, detail: str = "") -> None:
         """Terminate an *active* slot with a structured rejection (e.g. a
@@ -658,6 +864,11 @@ class Scheduler:
         if self.mgr is not None:
             self.mgr.release(i)
         self.slots[i] = None
+        self._t_submit.pop(sl.req.rid, None)
+        self._t_emit.pop(sl.req.rid, None)
+        if self.trace.enabled:
+            self.trace.instant("shed", PID_REQUESTS, sl.req.rid, args={
+                "rid": sl.req.rid, "reason": reason})
 
     def _preempt_one(self) -> bool:
         """Recompute-preemption under pool pressure (ladder level 3):
@@ -685,6 +896,10 @@ class Scheduler:
         self.slots[i] = None
         self.preemptions += 1
         self.ladder.escalate_to(self.clock, 3, "preemption")
+        if self.trace.enabled:
+            self.trace.instant("preempt", PID_REQUESTS, sl.req.rid, args={
+                "rid": sl.req.rid, "slot": i, "pos": sl.pos})
+            self._t_queued[sl.req.rid] = self.trace.ts()
         return True
 
     # ---------------------------------------------------------- fault hooks
@@ -721,14 +936,16 @@ class Scheduler:
         if not self._in_stall:
             self.stall_episodes += 1
             self._in_stall = True
-            pool = (f"{self.mgr.pages_in_use}/{self.mgr.num_pages} pages"
-                    if self.mgr is not None else "dense layout")
-            log.warning(
-                "scheduler: %d row(s) stalled at pool exhaustion "
-                "(clock %d, %s, ladder -> %s; episode %d)",
-                stalled, self.clock, pool,
-                self.ladder.snapshot()["name"], self.stall_episodes,
-            )
+            pool = (f"{self.mgr.pages_in_use}/{self.mgr.num_pages}"
+                    if self.mgr is not None else "dense")
+            log.warning(kv(
+                "stall", tick=self.clock, rows=stalled, pool=pool,
+                ladder=self.ladder.snapshot()["name"],
+                episode=self.stall_episodes,
+            ))
+            if self.trace.enabled:
+                self.trace.instant("stall", PID_SCHED, TID_TICK, args={
+                    "tick": self.clock, "rows": stalled})
 
     # ---------------------------------------------------------- prefix cache
     def _register_prefix(self, i: int) -> None:
@@ -859,6 +1076,17 @@ class Scheduler:
             sl.meter.emitted_tokens += 1
             if continuing:
                 sl.meter.decode_tokens += 1
+        # latency accounting (wall clock, rid-keyed so it survives
+        # preemption — the requeue gap is real user-visible latency)
+        now = time.perf_counter()
+        rid = sl.req.rid
+        prev = self._t_emit.get(rid)
+        if prev is not None:
+            self._h_itl.labels(sl.req.priority).observe(now - prev)
+        elif rid in self._t_submit:
+            self._h_ttft.labels(sl.req.priority).observe(
+                now - self._t_submit[rid])
+        self._t_emit[rid] = now
 
     def _end_tick(self, ran: bool) -> bool:
         """Per-tick ladder/admission bookkeeping: relax toward healthy on
@@ -875,10 +1103,32 @@ class Scheduler:
         """Plan + run one mixed step. Returns False when nothing ran.
 
         Advances the logical ``clock`` unconditionally — deadlines, fault
-        plans, and the ladder key on it, so even idle ticks count as time."""
+        plans, and the ladder key on it, so even idle ticks count as time.
+
+        Observability wrapper: one ``tick`` span (phase spans nest inside
+        ``_tick_inner``), per-tick counter tracks, and the tick-duration
+        histogram. The disabled-tracer path adds one branch + one
+        ``perf_counter`` pair over the pre-§14 code."""
+        t0 = time.perf_counter()
+        tr = self.trace
+        if tr.enabled:
+            self._tick_energy_j = 0.0
+            with tr.span("tick", args={"clock": self.clock + 1}):
+                ran = self._tick_inner()
+            wall = time.perf_counter() - t0
+            self._emit_counter_tracks(wall)
+        else:
+            ran = self._tick_inner()
+            wall = time.perf_counter() - t0
+        self._h_tick.observe(wall)
+        return ran
+
+    def _tick_inner(self) -> bool:
         self.clock += 1
         self._fault_fired = False
         self._stall_this_tick = False
+        tr = self.trace
+        _pt = tr.ts()
         if self.faults is not None:
             self._apply_tick_faults()
         if self.admission.queue_pressure():
@@ -891,6 +1141,10 @@ class Scheduler:
             self.admission.shed_expired(self.clock)
             self.admission.shed_class("batch", self.clock)
         self._admit()
+        if tr.enabled:
+            now = tr.ts()
+            tr.complete("admit", PID_SCHED, TID_TICK, _pt, now - _pt)
+            _pt = now
         tokens, pos, lens, decode_rows, prefill_rows, stalled = self._plan()
         if stalled:
             self._note_stall(stalled)
@@ -902,6 +1156,11 @@ class Scheduler:
             if stalled:
                 self._note_stall(stalled)
         scheduled = decode_rows + prefill_rows
+        if tr.enabled:
+            tr.complete("plan", PID_SCHED, TID_TICK, _pt, tr.ts() - _pt,
+                        args={"decode_rows": len(decode_rows),
+                              "prefill_rows": len(prefill_rows),
+                              "stalled": stalled})
         if not scheduled:
             if any(s is not None for s in self.slots):
                 if self._fault_fired:
@@ -919,7 +1178,8 @@ class Scheduler:
         if self.spec is not None:
             return self._end_tick(
                 self._spec_tick(tokens, pos, lens, decode_rows, prefill_rows))
-        self._drain_cow()
+        with tr.span("cow_drain"):
+            self._drain_cow()
         tables = self._tables()
 
         # width-adaptive tick: decode-only ticks run the step at width 1
@@ -933,8 +1193,9 @@ class Scheduler:
         fbset = {i for i in scheduled if self.slots[i].fallback}
         fb_np = None
         if fbset:
-            fb_np = self._run_fallback(tokens, pos, lens, tables,
-                                       sorted(fbset), width)
+            with tr.span("fallback_step"):
+                fb_np = self._run_fallback(tokens, pos, lens, tables,
+                                           sorted(fbset), width)
             if fb_np is None:
                 for i in sorted(fbset):
                     self._shed_slot(i, RejectReason.NUMERICAL_FAULT,
@@ -949,6 +1210,7 @@ class Scheduler:
         step_by_bits: dict = {}
         # writable host copy: fault injection + row merging mutate it
         logits_np = None if fb_np is None else fb_np.copy()
+        _st = tr.ts()
         if main_rows:
             lens_main = lens.copy()
             for i in fbset:
@@ -988,7 +1250,31 @@ class Scheduler:
                 for i in main_rows:
                     logits_np[i] = main_np[i]
         self.ticks += 1
-        self.prefill_tokens_computed += sum(int(lens[i]) for i in prefill_rows)
+        n_prefill = sum(int(lens[i]) for i in prefill_rows)
+        self.prefill_tokens_computed += n_prefill
+        if n_prefill:
+            self._c_sched_tokens.labels("prefill").inc(n_prefill)
+        if decode_rows:
+            self._c_sched_tokens.labels("decode").inc(len(decode_rows))
+        if self.track_energy:
+            self._note_step_energy(step_by_bits, bucket="target")
+        if tr.enabled:
+            # device_step ends at the host logits materialization (the sync)
+            _sdur = tr.ts() - _st
+            tr.complete("device_step", PID_SCHED, TID_TICK, _st, _sdur, args={
+                "rows": len(main_rows), "width": width,
+                "tokens": int(sum(int(lens[i]) for i in scheduled))})
+            for i in scheduled:
+                sl = self.slots[i]
+                if sl is None:
+                    continue
+                tr.complete(
+                    "prefill" if i in prefill_rows else "decode",
+                    PID_REQUESTS, sl.req.rid, _st, _sdur,
+                    args={"rid": sl.req.rid, "pos": int(pos[i]),
+                          "tokens": int(lens[i]),
+                          **({"path": "fallback"} if i in fbset else {})})
+        _ct = tr.ts()
 
         # induced numerical faults corrupt target-policy rows only (the
         # fallback step models the numerically-safe path)
@@ -1032,6 +1318,8 @@ class Scheduler:
                     continue
             self._register_prefix(i)
         self._rr = (self._rr + 1) % self.max_batch
+        if tr.enabled:
+            tr.complete("commit", PID_SCHED, TID_TICK, _ct, tr.ts() - _ct)
         return self._end_tick(True)
 
     # ------------------------------------------------------ numerical guard
@@ -1058,11 +1346,14 @@ class Scheduler:
         if sl.retries > self.nan_retry_limit and not sl.fallback:
             sl.fallback = True
             self.fallback_retries += 1
-        log.warning(
-            "scheduler: non-finite logits on row %d (rid %d, clock %d) — %s",
-            i, sl.req.rid, self.clock,
-            "fallback policy engaged" if sl.fallback else "clean retry",
-        )
+        log.warning(kv(
+            "nan_logits", rid=sl.req.rid, tick=self.clock, row=i,
+            retries=sl.retries,
+            action="fallback" if sl.fallback else "retry",
+        ))
+        if self.trace.enabled:
+            self.trace.instant("nan_quarantine", PID_REQUESTS, sl.req.rid,
+                               args={"rid": sl.req.rid, "row": i})
 
     def _run_fallback(self, tokens, pos, lens, tables, fb_rows, width):
         """One mixed step at ``rc.fallback_policy`` (default ``*=bf16``) for
@@ -1102,7 +1393,9 @@ class Scheduler:
                 jnp.asarray(lens_fb), tables,
             )
         except Exception as e:  # noqa: BLE001 — any lowering failure is terminal
-            log.error("scheduler: fallback policy step unavailable: %r", e)
+            log.error(kv("fallback_unavailable", tick=self.clock,
+                         policy=self.rc.fallback_policy or "*=bf16",
+                         error=repr(e)))
             self._fb_unavailable = True
             return None
         return np.asarray(logits, np.float32)
@@ -1122,6 +1415,7 @@ class Scheduler:
         from .spec import DraftRow, greedy_accept, rejection_accept
 
         spec, rows = self.spec, self.max_batch
+        tr = self.trace
         W = tokens.shape[1]
 
         # ---- stale-draft resync (one slot/tick, healthy ladder only): re-
@@ -1180,7 +1474,8 @@ class Scheduler:
                 ))
         # resolve copy-on-write before anything (draft or verify) writes
         # into this tick's pages — covers _plan's and the γ-extends above
-        self._drain_cow()
+        with tr.span("cow_drain"):
+            self._drain_cow()
         tables = self._tables()
 
         # quarantined rows run the fallback-policy step instead (masked out
@@ -1189,8 +1484,9 @@ class Scheduler:
         fb_np = None
         if fbset:
             fbw = W if any(i in fbset for i in prefill_rows) else 1
-            fb_np = self._run_fallback(tokens, pos, lens, tables,
-                                       sorted(fbset), fbw)
+            with tr.span("fallback_step"):
+                fb_np = self._run_fallback(tokens, pos, lens, tables,
+                                           sorted(fbset), fbw)
             if fb_np is None:
                 for i in sorted(fbset):
                     self._shed_slot(i, RejectReason.NUMERICAL_FAULT,
@@ -1205,6 +1501,7 @@ class Scheduler:
         proposals: dict[int, list[int]] = {}
         qlogits: list[np.ndarray] = []
         if draft_rows:
+            _dt = tr.ts()
             proposals, qlogits, draft_events = spec.draft(
                 draft_rows, tables, self.temperature, self.key
             )
@@ -1213,6 +1510,9 @@ class Scheduler:
                     sl = self.slots[i]
                     if sl is not None and sl.meter is not None:
                         sl.meter.add_share(by_bits, w, bucket="draft")
+                if self.track_energy:
+                    self._note_step_energy(by_bits, bucket="draft")
+            n_drafted = 0
             for r in draft_rows:
                 sl = self.slots[r.row]
                 # the draft ingested [gap..., last, d_1..d_{g-1}] — its pool
@@ -1220,8 +1520,18 @@ class Scheduler:
                 sl.draft_pos = r.pos + r.g
                 sl.draft_gap = []
                 self.drafted_tokens += r.g
+                n_drafted += r.g
                 if sl.meter is not None:
                     sl.meter.drafted_tokens += r.g
+            self._c_sched_tokens.labels("draft").inc(n_drafted)
+            if tr.enabled:
+                _ddur = tr.ts() - _dt
+                tr.complete("draft", PID_SCHED, TID_TICK, _dt, _ddur, args={
+                    "rows": len(draft_rows), "drafted": n_drafted})
+                for r in draft_rows:
+                    tr.complete("draft", PID_REQUESTS, r.rid, _dt, _ddur,
+                                args={"rid": r.rid, "pos": r.pos,
+                                      "gamma": r.g})
 
         # ---- verify + prefill: one target step, every column's logits kept
         Wv = max(spec.gamma + 1, W if prefill_rows else 0)
@@ -1240,6 +1550,7 @@ class Scheduler:
             for j, t in enumerate(proposals.get(i, [])):
                 vt[i, 1 + j] = t
             vlens[i] = g[i] + 1
+        _st = tr.ts()
         out = self._vstep(
             self.params, self.caches,
             jnp.asarray(vt), jnp.asarray(pos), jnp.asarray(vlens), tables,
@@ -1247,10 +1558,16 @@ class Scheduler:
         if self.track_energy:
             self.caches, logits, tree = out
             step_by_bits = tree_totals_by_bits(tree)
+            self._note_step_energy(step_by_bits, bucket="target")
         else:
             self.caches, logits = out
         self.ticks += 1
-        self.prefill_tokens_computed += sum(int(lens[i]) for i in prefill_rows)
+        n_prefill = sum(int(lens[i]) for i in prefill_rows)
+        self.prefill_tokens_computed += n_prefill
+        if n_prefill:
+            self._c_sched_tokens.labels("prefill").inc(n_prefill)
+        if decode_rows:
+            self._c_sched_tokens.labels("decode").inc(len(decode_rows))
         scheduled = decode_rows + prefill_rows
         total = float(sum(int(vlens[i]) for i in scheduled)) or 1.0
         if self.track_energy:
@@ -1267,10 +1584,13 @@ class Scheduler:
                 mlens[i] = 0
             for i in fbset:
                 mlens[i] = 0      # fallback rows' drafts are stale anyway
-            m_by_bits = spec.mirror_prefill(
-                jnp.asarray(tokens[:, :W]), jnp.asarray(pos), jnp.asarray(mlens),
-                tables,
-            )
+            with tr.span("mirror"):
+                m_by_bits = spec.mirror_prefill(
+                    jnp.asarray(tokens[:, :W]), jnp.asarray(pos),
+                    jnp.asarray(mlens), tables,
+                )
+            if m_by_bits and self.track_energy:
+                self._note_step_energy(m_by_bits, bucket="draft")
             m_total = float(sum(int(mlens[i]) for i in main_prefill)) or 1.0
             for i in main_prefill:
                 sl = self.slots[i]
@@ -1281,6 +1601,23 @@ class Scheduler:
 
         # ---- numerical-fault guard (injection, then detection)
         logits_np = np.array(logits, np.float32)             # (B, Wv, V) copy
+        if tr.enabled:
+            # ends at the host materialization above (the device sync); the
+            # interval includes the mirror dispatch, which is async
+            _sdur = tr.ts() - _st
+            tr.complete("device_step", PID_SCHED, TID_TICK, _st, _sdur, args={
+                "rows": len(scheduled), "width": int(Wv), "kind": "verify"})
+            for i in scheduled:
+                sl = self.slots[i]
+                if sl is None:
+                    continue
+                tr.complete(
+                    "prefill" if i in prefill_rows else "verify",
+                    PID_REQUESTS, sl.req.rid, _st, _sdur,
+                    args={"rid": sl.req.rid, "pos": int(pos[i]),
+                          "tokens": int(vlens[i]),
+                          **({"path": "fallback"} if i in fbset else {})})
+        _ct = tr.ts()
         if self.faults is not None:
             for ev in self.faults.at(self.clock, "nan_logits"):
                 r = ev.arg % rows
@@ -1394,6 +1731,8 @@ class Scheduler:
                     continue
             self._register_prefix(i)
         self._rr = (self._rr + 1) % self.max_batch
+        if tr.enabled:
+            tr.complete("commit", PID_SCHED, TID_TICK, _ct, tr.ts() - _ct)
         return True
 
     def run(self, max_ticks: int = 100_000) -> list[Request]:
@@ -1414,7 +1753,7 @@ class Scheduler:
             n = self.admission.flush_pending(RejectReason.SHUTTING_DOWN,
                                              self.clock)
             if n:
-                log.info("scheduler: drain flushed %d queued request(s)", n)
+                log.info(kv("drain_flush", tick=self.clock, flushed=n))
         return self.finished
 
     # -------------------------------------------------------------- health
@@ -1427,12 +1766,25 @@ class Scheduler:
         ``kernels`` surfaces the trace-time Pallas-vs-XLA path counters
         (kernels.ops): per-GEMM-name compiled paths and every explicit
         fallback with its reason, so a silent accelerator downgrade shows up
-        in the health snapshot instead of only in wall-clock."""
-        from ..kernels import ops as _kops
+        in the health snapshot instead of only in wall-clock. The counters
+        are process-global; this view diffs against the snapshot taken at
+        THIS engine's construction, so co-hosted engines never see each
+        other's trace events (§14 satellite fix).
 
+        ``latency`` summarizes the wall-clock histograms (seconds): TTFT
+        and inter-token percentiles over every priority class."""
         mgr = self.mgr
+
+        def _pct(h):
+            return {"count": sum(c.count for c in h.children.values()),
+                    **{f"p{p}": round(_family_percentile(h, p), 6)
+                       for p in (50, 95, 99)}}
+
         return {
-            "kernels": _kops.kernel_counters(),
+            "kernels": self._kops.kernel_counters_since(self._kernel_base),
+            "latency": {"ttft_s": _pct(self._h_ttft),
+                        "itl_s": _pct(self._h_itl),
+                        "tick_s": _pct(self._h_tick)},
             "clock": self.clock,
             "ticks": self.ticks,
             "draining": self.draining,
@@ -1612,6 +1964,14 @@ class Scheduler:
         }
 
 
+# Registry-backed views over the legacy counter attributes (see
+# _SCHED_COUNTERS). Installed on the class so instance assignment
+# (``self.ticks = 0`` / ``+= 1``) routes through the property setter.
+for _a in _SCHED_COUNTERS:
+    setattr(Scheduler, _a, _counter_property(_a))
+del _a
+
+
 def install_sigint_drain(sched: Scheduler):
     """Graceful shutdown (satellite b): the first SIGINT begins a drain —
     active slots finish, queued work is rejected with structured
@@ -1627,11 +1987,12 @@ def install_sigint_drain(sched: Scheduler):
         if sched.draining:
             signal.signal(signal.SIGINT, prev)
             raise KeyboardInterrupt
-        log.warning(
-            "SIGINT: draining %d active slot(s), %d queued — ^C again to abort",
-            sum(1 for s in sched.slots if s is not None),
-            sched.admission.pending(),
-        )
+        log.warning(kv(
+            "sigint_drain", tick=sched.clock,
+            active=sum(1 for s in sched.slots if s is not None),
+            queued=sched.admission.pending(),
+            hint="^C again to abort",
+        ))
         sched.begin_drain()
 
     signal.signal(signal.SIGINT, _handler)

@@ -196,7 +196,8 @@ class SpecDecoder:
         else:
             self.caches = init_caches(cfg, self.rc_draft, max_batch, capacity)
         self._step = jax.jit(
-            build_mixed_step(cfg, self.rc_draft, with_stats=track_energy),
+            build_mixed_step(cfg, self.rc_draft, with_stats=track_energy,
+                             scope="serve/draft"),
             donate_argnums=(1,),
         )
 
